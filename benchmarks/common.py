@@ -1,0 +1,64 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.apps.paper_kernels import get_case
+from repro.core.codegen import required_shapes
+from repro.core.race import race
+
+
+def build_env(case, dtype=np.float32, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    env = {}
+    for nm, shp in required_shapes(case.program).items():
+        if nm in case.scalars or shp == ():
+            env[nm] = dtype(rng.uniform(0.25, 1.0))
+        else:
+            env[nm] = rng.uniform(-1, 1, shp).astype(dtype)
+    return env
+
+
+def variants(case, auto_level: bool = True):
+    """(tag, RaceResult) for Base-equivalent NR / ESR+ / full RACE.
+
+    ``auto_level`` picks the reassociation level {3,4} (and NR) with the best
+    static profit — a beyond-paper knob (the paper selects levels manually
+    per case); the paper-faithful level stays available as case.reassociate.
+    """
+    out = {"RACE-NR": race(case.program)}
+    out["ESR+"] = race(case.program, reassociate=3, esr=True)
+    full = race(case.program, reassociate=case.reassociate,
+                rewrite_div=case.rewrite_div)
+    if auto_level:
+        cands = [full] + [
+            race(case.program, reassociate=lvl, rewrite_div=case.rewrite_div)
+            for lvl in (3, 4)
+            if lvl != case.reassociate
+        ]
+        cands.append(out["RACE-NR"])
+        full = min(cands, key=lambda r: r.op_table()["weighted_total"])
+    out["RACE"] = full
+    return out
+
+
+def time_fn(fn, env, repeats: int = 5, warmup: int = 2):
+    """Median wall time of a jitted evaluator, seconds."""
+    jfn = jax.jit(fn)
+    for _ in range(warmup):
+        res = jfn(env)
+    jax.block_until_ready(res)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(env))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_line(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.2f},{derived}"

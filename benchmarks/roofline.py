@@ -1,0 +1,90 @@
+"""Roofline table (EXPERIMENTS.md section Roofline) from the dry-run JSON.
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+  compute_s    = HLO_FLOPs_per_device / 197 TFLOP/s
+  memory_s     = analytic HBM bytes / 819 GB/s    (XLA 'bytes accessed' is an
+                 unfused upper bound and is reported alongside)
+  collective_s = parsed collective bytes / (4 links x 50 GB/s)
+plus MODEL_FLOPS (6*N*D train / 2*N_active*D inference), the useful-compute
+ratio MODEL/HLO, the dominant term, and the roofline fraction
+compute_s / max(terms).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+CHIPS = 256
+PEAK, HBM, ICI = 197e12, 819e9, 4 * 50e9
+
+
+def model_flops(rec) -> float:
+    mode = rec["mode"]
+    # tokens per step
+    import re
+
+    shape = rec["shape"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768, "decode_32k": 1,
+           "long_500k": 1}[shape]
+    batch = {"train_4k": 256, "prefill_32k": 32, "decode_32k": 128,
+             "long_500k": 1}[shape]
+    toks = seq * batch
+    n = rec["n_active_params"]
+    return (6 if mode == "train" else 2) * n * toks
+
+
+def rows(single_pod_only: bool = True):
+    out = []
+    for f in sorted(DRYRUN.glob("*.pod.json")):
+        rec = json.loads(f.read_text())
+        if not rec.get("runnable"):
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "skip": rec["skip_reason"]})
+            continue
+        if not rec.get("ok") or "totals" not in rec:
+            out.append({"arch": rec["arch"], "shape": rec["shape"],
+                        "skip": f"FAILED: {rec.get('error')}"})
+            continue
+        t = rec["totals"]
+        compute_s = t["flops_per_device"] / PEAK
+        mem_s = t.get("analytic_hbm_bytes_per_device", t["bytes_per_device"]) / HBM
+        mem_upper_s = t["bytes_per_device"] / HBM
+        coll_s = t["coll_bytes_per_device"] / ICI
+        bound = max(compute_s, mem_s, coll_s)
+        mf = model_flops(rec)
+        hlo_global = t["flops_per_device"] * CHIPS
+        out.append({
+            "arch": rec["arch"], "shape": rec["shape"], "mode": rec["mode"],
+            "compute_s": compute_s, "memory_s": mem_s,
+            "memory_upper_s": mem_upper_s, "collective_s": coll_s,
+            "dominant": max(
+                {"compute": compute_s, "memory": mem_s,
+                 "collective": coll_s}.items(), key=lambda kv: kv[1])[0],
+            "roofline_fraction": compute_s / bound if bound else 0.0,
+            "model_flops": mf, "hlo_flops_global": hlo_global,
+            "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+            "temp_gib": rec["full"]["memory"].get("temp_size_in_bytes", 0) / 2**30,
+            "args_gib": rec["full"]["memory"].get("argument_size_in_bytes", 0) / 2**30,
+        })
+    return out
+
+
+def run(print_fn=print):
+    table = rows()
+    for r in table:
+        if "skip" in r:
+            print_fn(f"roofline.{r['arch']}.{r['shape']},0.00,SKIP:{r['skip']}")
+            continue
+        derived = (
+            f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}"
+            f";compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f}"
+            f";memUB_s={r['memory_upper_s']:.4f};coll_s={r['collective_s']:.4f}"
+            f";useful={r['useful_ratio']:.3f};temp_gib={r['temp_gib']:.2f}"
+        )
+        print_fn(f"roofline.{r['arch']}.{r['shape']},{r['compute_s']*1e6:.1f},{derived}")
+    return table
+
+
+if __name__ == "__main__":
+    run()

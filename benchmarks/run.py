@@ -1,0 +1,62 @@
+"""Benchmark entrypoint: one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only table1,...]
+
+Prints ``name,us_per_call,derived`` CSV per the harness convention.
+Sections: table1 (Table 1), speedup (Figs 7-8), scaling (Fig 9),
+memory (Fig 10), roofline (EXPERIMENTS.md section Roofline; reads the
+dry-run JSON and is skipped with a note if the dry-run has not been run).
+Fig 11 (OpenMP thread scaling) has no analogue on this 1-core container;
+its distributed counterpart is the sharded dry-run — noted, not faked.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="smaller sweeps")
+    ap.add_argument("--only", type=str, default="")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    sections = []
+    from . import memory, scaling, speedup, table1
+
+    sections = [
+        ("table1", lambda: table1.run()),
+        ("speedup", lambda: speedup.run(
+            cases=["calc_tpoints", "gaussian", "psinv", "derivative"] if args.quick else None)),
+        ("scaling", lambda: scaling.run()),
+        ("memory", lambda: memory.run()),
+    ]
+    try:
+        from . import roofline
+
+        sections.append(("roofline", lambda: roofline.run()))
+    except Exception:  # pragma: no cover
+        pass
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        if args.quick and name == "scaling":
+            continue
+        try:
+            fn()
+        except Exception as e:  # keep the harness going; report at the end
+            failures += 1
+            print(f"{name},0.00,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    print(f"done,0.00,sections_failed={failures}")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

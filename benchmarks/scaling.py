@@ -1,0 +1,40 @@
+"""Paper Figure 9: runtime vs input size at fixed total work N*T.
+
+For each representative kernel we sweep the grid size with the step count
+chosen so size*steps is constant (the paper fixes N*T = 2^31; we use a
+CPU-friendly constant), reporting runtime for Base vs RACE.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.apps.paper_kernels import get_case
+
+from .common import build_env, csv_line, time_fn, variants
+
+KERNELS_2D = {"calc_tpoints": [128, 256, 512, 1024], "gaussian": [128, 256, 512, 1024]}
+KERNELS_3D = {"psinv": [24, 32, 48, 64], "diffusion1": [24, 32, 48, 64],
+              "derivative": [24, 32, 40], "j3d27pt": [24, 32, 48, 64]}
+TOTAL_WORK = 2 ** 24  # elements * steps
+
+
+def run(print_fn=print, repeats: int = 3):
+    rows = []
+    for name, sizes in {**KERNELS_2D, **KERNELS_3D}.items():
+        dims = 2 if name in KERNELS_2D else 3
+        for n in sizes:
+            case = get_case(name, n)
+            elems = n ** dims
+            steps = max(1, TOTAL_WORK // elems)
+            env = build_env(case)
+            v = variants(case)
+            t_base = time_fn(v["RACE"].baseline_evaluator(), env, repeats) * steps
+            t_race = time_fn(v["RACE"].evaluator(), env, repeats) * steps
+            derived = f"n={n};steps={steps};t_base_s={t_base:.4f};t_race_s={t_race:.4f}"
+            print_fn(csv_line(f"scaling.{name}.{n}", t_race / steps * 1e6, derived))
+            rows.append(dict(name=name, n=n, t_base=t_base, t_race=t_race))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Paper Table 1: static redundancy analysis for all 15 cases.
+
+Prints per case: Reduced Ops (static), AA Num, Alg Iter, and the
+add/sub/mul/div/sincos operation rows for Base / RACE-NR / RACE, next to the
+paper's numbers where the paper prints them.
+"""
+from __future__ import annotations
+
+from repro.apps.paper_kernels import TABLE1_ORDER, get_case
+
+from .common import csv_line, variants
+
+COLS = ("add", "sub", "mul", "div", "sincos")
+
+
+def run(sizes=None, print_fn=print):
+    rows = []
+    for name in TABLE1_ORDER:
+        case = get_case(name)
+        v = variants(case)
+        nr, full = v["RACE-NR"], v["RACE"]
+        tb = full.op_table(base=True)
+        tn, tf = nr.op_table(), full.op_table()
+
+        def fmt(t):
+            return "/".join(f"{round(t[c], 1):g}" for c in COLS)
+
+        paper = case.paper
+        pops = paper.get("ops", {})
+        paper_str = ";".join(
+            f"{c}:{'/'.join(map(str, pops[c]))}" for c in pops
+        )
+        derived = (
+            f"fidelity={case.fidelity};red={full.reduced_ops():.2f}"
+            f";paper_red={paper.get('reduced')}"
+            f";aa={full.n_aux()};paper_aa={paper.get('aa')}"
+            f";iter={full.rounds()};paper_iter={paper.get('iters')}"
+            f";base={fmt(tb)};nr={fmt(tn)};race={fmt(tf)};paper[{paper_str}]"
+        )
+        line = csv_line(f"table1.{name}", 0.0, derived)
+        print_fn(line)
+        rows.append(
+            dict(name=name, reduced=full.reduced_ops(), aa=full.n_aux(),
+                 iters=full.rounds(), base=tb, nr=tn, race=tf, paper=paper)
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    run()

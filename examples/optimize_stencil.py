@@ -1,0 +1,71 @@
+"""RACE + the Pallas VMEM-contracted stencil kernel, end to end.
+
+    PYTHONPATH=src python examples/optimize_stencil.py
+
+Takes the 27-point Jacobi stencil (paper Table 1 'j3d27pt'), runs RACE, then
+executes the optimized plan three ways — XLA baseline, XLA RACE evaluator,
+and the blocked Pallas kernel (interpret mode on CPU) — validating they agree
+and reporting op counts and wall-clock.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.apps.paper_kernels import stencil_j3d27pt
+from repro.core.codegen import required_shapes
+from repro.core.race import race
+from repro.kernels import ref as kref
+from repro.kernels.ops import race_stencil
+
+
+def main():
+    case = stencil_j3d27pt(48)
+    res = race(case.program, reassociate=3)
+    tb, tr = res.op_table(base=True), res.op_table()
+    print(f"j3d27pt 48^3: aux={res.n_aux()} rounds={res.rounds()}")
+    print(f"  ops/iter: base add={tb['add']:.0f} mul={tb['mul']:.0f} -> "
+          f"RACE add={tr['add']:.0f} mul={tr['mul']:.0f} "
+          f"(reduced {res.reduced_ops():.2f})")
+
+    rng = np.random.default_rng(0)
+    env = {}
+    for nm, shp in required_shapes(case.program).items():
+        env[nm] = (np.float32(rng.uniform(0.2, 1.0)) if nm in case.scalars
+                   else rng.uniform(-1, 1, shp).astype(np.float32))
+
+    base_fn = jax.jit(res.baseline_evaluator())
+    opt_fn = jax.jit(res.evaluator())
+
+    def bench(fn, *a):
+        jax.block_until_ready(fn(*a))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(*a)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 3
+
+    t_base, t_opt = bench(base_fn, env), bench(opt_fn, env)
+    t0 = time.perf_counter()
+    pallas_out = race_stencil(res, env, block_rows=8, interpret=True)
+    t_pal = time.perf_counter() - t0
+
+    want = kref.reference(res.plan, env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(pallas_out[k]),
+                                   np.asarray(want[k]), rtol=2e-4, atol=2e-4)
+    print(f"  XLA baseline {t_base*1e3:.1f} ms | XLA RACE {t_opt*1e3:.1f} ms "
+          f"({t_base/t_opt:.2f}x)")
+    print(f"  Pallas (interpret mode, correctness-validated) ran in "
+          f"{t_pal*1e3:.0f} ms — compiled path targets TPU VMEM tiling")
+    print("  kernel == oracle: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Quickstart: RACE on the paper's flagship example (POP calc_tpoints).
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the loop nest of Fig. 1, runs the full RACE pipeline (reassociation +
+Pair-Graph/MIS + IDF + contraction), prints the Fig. 2-style transformed
+code and the Table-1 operation counts, then measures actual CPU wall-clock
+speedup of the jitted evaluators.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.apps.paper_kernels import pop_calc_tpoints
+from repro.core.race import race
+
+
+def main():
+    case = pop_calc_tpoints(nx=512, ny=512)
+    print("=== RACE: Redundant Array Computation Elimination ===\n")
+    full = race(case.program, reassociate=3)
+    nr = race(case.program)
+
+    print(f"auxiliary arrays found : {full.n_aux()}  (paper: 9)")
+    print(f"detection iterations   : {full.rounds()}  (paper: 3)")
+    t_base, t_nr, t_full = (full.op_table(base=True), nr.op_table(),
+                            full.op_table())
+    for tag, t in [("base", t_base), ("RACE-NR", t_nr), ("RACE", t_full)]:
+        print(f"  {tag:8s} add={t['add']:.0f} mul={t['mul']:.0f} "
+              f"sincos={t['sincos']:.0f}")
+    print(f"reduced ops            : {full.reduced_ops():.2f} (paper: 0.55)\n")
+    print("--- transformed code (cf. paper Fig. 2) ---")
+    print(full.to_source())
+
+    rng = np.random.default_rng(0)
+    env = {"ulon": rng.standard_normal((512, 512)).astype(np.float32),
+           "ulat": rng.standard_normal((512, 512)).astype(np.float32),
+           "p25": np.float32(0.25)}
+
+    def bench(fn):
+        j = jax.jit(fn)
+        jax.block_until_ready(j(env))
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = j(env)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / 5
+
+    tb = bench(full.baseline_evaluator())
+    tf = bench(full.evaluator())
+    print(f"\nCPU wall-clock: baseline {tb*1e3:.2f} ms -> RACE {tf*1e3:.2f} ms "
+          f"({tb/tf:.2f}x speedup; paper reports 3.06x on Xeon)")
+
+
+if __name__ == "__main__":
+    main()

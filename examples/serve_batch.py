@@ -1,0 +1,16 @@
+"""Batched serving example: prefill + KV/state-cache decode on a reduced
+falcon-mamba (SSM: O(1) state per token — the long_500k family).
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "falcon_mamba_7b", "--reduced",
+                "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    serve.main()

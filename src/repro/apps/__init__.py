@@ -1,0 +1,1 @@
+from .paper_kernels import CASES, get_case  # noqa: F401

@@ -1,0 +1,134 @@
+"""RACE driver: the public API tying detection, contraction, analysis, and
+code generation together (paper Fig. 3 workflow).
+
+    result = race(program)                      # binary, bitwise-faithful
+    result = race(program, reassociate=3)       # n-ary path (Section 7)
+    result = race(program, esr=True)            # ESR(+) comparison baseline
+
+``reassociate`` levels follow Section 7.1:
+    0  no reassociation (binary detection; preserves FP results exactly)
+    2  respect parentheses as written (flatten only explicit same-op chains
+       the programmer parenthesized together — our IR has no parens, so this
+       flattens nothing and equals level 0 + pair-graph detection)
+    3  flatten nested same-operator chains (+ into +, * into *)
+    4  additionally distribute loop-invariant scalar/const multiplications
+       over sums (cautious distributive law; may add ops, so gated by profit)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+from . import analysis
+from .codegen import build_baseline_evaluator, build_plan_evaluator
+from .depgraph import Plan, finalize, materialized_elements
+from .detect import PaperCost, RooflineCost, Transformed, detect_binary
+from .ir import Program, fmt_expr, fmt_ref
+
+
+@dataclass
+class RaceResult:
+    program: Program
+    plan: Plan
+    transformed: Transformed
+    options: dict
+
+    # --- analysis ----------------------------------------------------------
+    def profit(self):
+        return analysis.profit(self.plan)
+
+    def op_table(self, base: bool = False):
+        return analysis.op_table(self.program, None if base else self.plan)
+
+    def reduced_ops(self) -> float:
+        return analysis.reduced_ops_fraction(self.program, self.plan)
+
+    def n_aux(self) -> int:
+        """Auxiliary arrays *found* (paper Table 1 'AA Num'); contraction may
+        inline some of them away (see n_aux_materialized)."""
+        return len(self.transformed.aux)
+
+    def n_aux_materialized(self) -> int:
+        return len(self.plan.aux_order)
+
+    def rounds(self) -> int:
+        return self.plan.rounds
+
+    def materialized_elements(self, contracted: bool = True) -> int:
+        return materialized_elements(self.plan, contracted)
+
+    # --- execution ---------------------------------------------------------
+    def evaluator(self):
+        return build_plan_evaluator(self.plan)
+
+    def baseline_evaluator(self):
+        return build_baseline_evaluator(self.program)
+
+    # --- pretty ------------------------------------------------------------
+    def to_source(self) -> str:
+        vn = {l.level: l.var for l in self.program.loops}
+        lines = []
+        for circle_key, names in self.plan.circles:
+            rng = dict(circle_key)
+            hdr = " ".join(
+                f"for {vn.get(l, f'i{l}')} in [{lo},{hi}]" for l, (lo, hi) in rng.items()
+            )
+            lines.append(f"# circle {hdr}")
+            for nm in names:
+                aux = next(a for a in self.plan.aux_order if a.name == nm)
+                lines.append(
+                    f"  {fmt_ref(aux.lhs(), vn)} = {fmt_expr(self.plan.aux_exprs[nm], vn)}"
+                )
+        hdr = " ".join(f"for {l.var} in [{l.lo},{l.hi}]" for l in self.program.loops)
+        lines.append(f"# main {hdr}")
+        for st in self.plan.body:
+            lines.append(f"  {fmt_ref(st.lhs, vn)} = {fmt_expr(st.rhs, vn)}")
+        return "\n".join(lines)
+
+
+def race(
+    program: Program,
+    reassociate: int = 0,
+    esr: bool = False,
+    contraction: bool = True,
+    cost_model: Optional[object] = None,
+    rewrite_sub: bool = True,
+    rewrite_div: bool = False,
+    max_rounds: int = 64,
+    mis_exact_limit: int = 40,
+) -> RaceResult:
+    """Run RACE on a program.  See module docstring for knobs."""
+    if reassociate and esr:
+        # ESR+ = ESR with reassociation (paper's strongest baseline)
+        pass
+    if reassociate:
+        from .nary import detect_nary
+
+        transformed = detect_nary(
+            program,
+            level=reassociate,
+            cost_model=cost_model or PaperCost(),
+            rewrite_sub=rewrite_sub,
+            rewrite_div=rewrite_div,
+            max_rounds=max_rounds,
+            restrict_innermost=esr,
+            mis_exact_limit=mis_exact_limit,
+        )
+    else:
+        transformed = detect_binary(
+            program,
+            cost_model=cost_model or PaperCost(),
+            max_rounds=max_rounds,
+            restrict_innermost=esr,
+        )
+    plan = finalize(transformed, contraction=contraction)
+    return RaceResult(
+        program,
+        plan,
+        transformed,
+        dict(
+            reassociate=reassociate,
+            esr=esr,
+            contraction=contraction,
+        ),
+    )

@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, ShardedTokenPipeline, synth_corpus  # noqa: F401

@@ -1,0 +1,315 @@
+"""Pallas TPU kernel executing a RACE plan for stencil programs.
+
+This is the hardware-adapted form of the paper's array contraction
+(DESIGN.md section 2, rule 3): auxiliary arrays are *never* materialized in
+HBM — each output tile recomputes its auxiliary slices into VMEM values of
+size O(tile + reuse-halo), exactly the paper's "compute the precompute loop
+inside the streaming loop with a small rolling buffer", re-expressed for the
+HBM->VMEM hierarchy.
+
+Kernel structure
+  * the iteration space is laid out level-major (outermost loop level =
+    axis 0, innermost level = last axis, which stays full-width for the VPU
+    lanes — the paper keeps the innermost dimension uncontracted for
+    vectorization for the same reason);
+  * the grid tiles axis 0; each step sees three consecutive input row-blocks
+    (prev/cur/next) via three BlockSpecs of the same operand — block-level
+    halo exchange, the standard Pallas idiom for overlapping windows;
+  * trailing axes carry a compile-time halo pad, so every shifted reference
+    is a static in-bounds slice;
+  * auxiliary values are evaluated in topological order with per-aux row/col
+    extensions derived from their consumers' shifts (reverse-topo pass), so
+    every reuse the detection found is realized as a VMEM hit.
+
+Supported programs: unit-coefficient affine references (stride-1 stencils),
+2-D/3-D nests, any number of outputs/statements, scalars and constants; the
+strided rprj3-style kernels stay on the XLA evaluator path.
+"""
+from __future__ import annotations
+
+from fractions import Fraction
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.depgraph import Plan, _aux_ref_shifts
+from repro.core.ir import Const, Expr, FuncName, Node, Ref
+
+_FUNCS = {"sin": jnp.sin, "cos": jnp.cos, "exp": jnp.exp, "log": jnp.log,
+          "sqrt": jnp.sqrt, "tanh": jnp.tanh, "abs": jnp.abs}
+
+
+# ---------------------------------------------------------------------------
+# plan geometry
+# ---------------------------------------------------------------------------
+
+
+def _ref_shift(ref: Ref):
+    """{level: integer shift} of a unit-coefficient reference (arrays may
+    cover a subset of the nest levels, e.g. 2-D map factors in a 3-D nest)."""
+    sh = {}
+    for s in ref.subs:
+        if s.s == 0:
+            raise ValueError("constant dims unsupported in the Pallas path")
+        if s.a != 1:
+            raise ValueError("strided references stay on the XLA path")
+        sh[s.s] = int(Fraction(s.b))
+    return sh
+
+
+def _ref_levels(ref: Ref):
+    return tuple(sorted(s.s for s in ref.subs))
+
+
+def _level_perm(ref: Ref):
+    """Permutation mapping array dims -> ascending level order."""
+    lv = [s.s for s in ref.subs]
+    return tuple(np.argsort(lv))
+
+
+def plan_geometry(plan: Plan):
+    """Compute per-level halo radii and per-aux extensions.
+
+    Returns (pad: per-level input halo, ext: {aux: per-level extension},
+    base_perms: {array: dim->level permutation}, out_names)."""
+    prog = plan.program
+    m = prog.depth
+    aux_names = {a.name for a in plan.aux_order}
+
+    # reverse-topo: consumers before producers
+    ext = {a.name: [0] * m for a in plan.aux_order}
+
+    def visit_consumer(expr: Expr, own_ext):
+        for nm, sh in _aux_ref_shifts(expr, aux_names):
+            for lvl in range(1, m + 1):
+                need = abs(sh.get(lvl, 0)) + own_ext[lvl - 1]
+                ext[nm][lvl - 1] = max(ext[nm][lvl - 1], need)
+
+    for st in plan.body:
+        visit_consumer(st.rhs, [0] * m)
+    for a in reversed(plan.aux_order):
+        visit_consumer(plan.aux_exprs[a.name], ext[a.name])
+
+    # total input halo: walk every base ref in every expr with the owning
+    # context's extension
+    pad = [0] * m
+    perms = {}
+    levels_of = {}
+
+    def visit_base(expr: Expr, own_ext):
+        for r in _walk_refs(expr):
+            if r.name in aux_names or not r.subs:
+                continue
+            sh = _ref_shift(r)
+            perms.setdefault(r.name, _level_perm(r))
+            levels_of.setdefault(r.name, _ref_levels(r))
+            for lvl, d in sh.items():
+                pad[lvl - 1] = max(pad[lvl - 1], abs(d) + own_ext[lvl - 1])
+
+    for st in plan.body:
+        visit_base(st.rhs, [0] * m)
+    for a in plan.aux_order:
+        visit_base(plan.aux_exprs[a.name], ext[a.name])
+    return tuple(pad), {k: tuple(v) for k, v in ext.items()}, perms, levels_of
+
+
+def _walk_refs(e: Expr):
+    from repro.core.ir import expr_refs
+
+    return expr_refs(e)
+
+
+# ---------------------------------------------------------------------------
+# kernel body generation
+# ---------------------------------------------------------------------------
+
+
+def _build_kernel(plan: Plan, pad, ext, scalar_names, base_names, out_names,
+                  bh: int, extents, levels_of):
+    """Returns kernel(scalars, windows..., outs...) for pl.pallas_call.
+    Arrays covering a level subset broadcast via size-1 axes at the levels
+    they lack."""
+    prog = plan.program
+    m = prog.depth
+    aux_names = [a.name for a in plan.aux_order]
+    aux_levels = {a.name: a.levels for a in plan.aux_order}
+    trailing_out = tuple(extents[1:])  # output trailing extents
+
+    def _out_width(lvl, re):  # tile width along a level (1-based)
+        return (bh if lvl == 1 else trailing_out[lvl - 2]) + 2 * re[lvl - 1]
+
+    def kernel(*refs):
+        it = iter(refs)
+        scal = next(it)  # (1, n_scalars)
+        windows = {}
+        for nm in base_names:
+            if 1 in levels_of[nm]:
+                prev, cur, nxt = next(it), next(it), next(it)
+                windows[nm] = jnp.concatenate(
+                    [prev[...], cur[...], nxt[...]], axis=0)
+            else:  # row-invariant array: one full operand
+                windows[nm] = next(it)[...]
+        outs = [next(it) for _ in out_names]
+
+        env_scalar = {nm: scal[0, i] for i, nm in enumerate(scalar_names)}
+        aux_vals = {}
+
+        def ev(e: Expr, re):
+            """Evaluate e over the tile extended by re (per level); result
+            has one axis per level (size 1 where e doesn't vary)."""
+            if isinstance(e, Const):
+                return jnp.float32(e.val)
+            if isinstance(e, Ref):
+                if not e.subs:
+                    return env_scalar[e.name]
+                sh = _ref_shift(e)
+                if e.name in aux_vals:
+                    val, store_ext, covered = aux_vals[e.name]
+                    sl = []
+                    for lvl in range(1, m + 1):
+                        if lvl in covered:
+                            s0 = store_ext[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
+                            sl.append(slice(s0, s0 + _out_width(lvl, re)))
+                        else:
+                            sl.append(slice(0, 1))
+                    return val[tuple(sl)]
+                w = windows[e.name]
+                covered = levels_of[e.name]
+                sl = []
+                for lvl in range(1, m + 1):
+                    if lvl not in covered:
+                        continue
+                    if lvl == 1:
+                        # window rows [i*bh, (i+3)*bh): output row rr at
+                        # shift s -> window row bh + rr + s
+                        s0 = bh + sh.get(1, 0) - re[0]
+                    else:
+                        s0 = pad[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
+                    sl.append(slice(s0, s0 + _out_width(lvl, re)))
+                v = w[tuple(sl)]
+                # insert size-1 axes at missing levels
+                shape = []
+                k = 0
+                for lvl in range(1, m + 1):
+                    if lvl in covered:
+                        shape.append(v.shape[k])
+                        k += 1
+                    else:
+                        shape.append(1)
+                return v.reshape(shape)
+            if isinstance(e, Node):
+                if e.op == "call":
+                    return _FUNCS[e.kids[0].name](ev(e.kids[1], re))
+                if e.op == "neg":
+                    return -ev(e.kids[0], re)
+                if e.op == "inv":
+                    return 1.0 / ev(e.kids[0], re)
+                a, b = ev(e.kids[0], re), ev(e.kids[1], re)
+                return {"+": a + b, "-": a - b, "*": a * b, "/": a / b}[e.op]
+            raise TypeError(e)
+
+        # auxiliary arrays: VMEM values (the contraction payoff)
+        for nm in aux_names:
+            aux_vals[nm] = (ev(plan.aux_exprs[nm], ext[nm]), ext[nm],
+                            set(aux_levels[nm]))
+
+        for ref, st in zip(outs, plan.body):
+            val = ev(st.rhs, (0,) * m)
+            full = (bh,) + trailing_out
+            ref[...] = jnp.broadcast_to(val, full).astype(ref.dtype)
+
+    return kernel
+
+
+def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
+                      interpret: bool = True):
+    """Execute the plan's main statements with a blocked Pallas kernel.
+
+    env maps base array names -> arrays (laid out as in the program) and
+    scalar names -> scalars.  Returns {output name: interior array} shaped by
+    the statement ranges (level-major layout transposed back to each output's
+    own dim order)."""
+    prog = plan.program
+    m = prog.depth
+    ranges = prog.ranges()
+    extents = [ranges[l][1] - ranges[l][0] + 1 for l in range(1, m + 1)]
+    lo = [ranges[l][0] for l in range(1, m + 1)]
+    pad, ext, perms, levels_of = plan_geometry(plan)
+    if pad[0] > block_rows:
+        raise ValueError("row halo exceeds block size; raise block_rows")
+
+    scalar_names = sorted(nm for nm, v in env.items() if np.ndim(v) == 0)
+    base_names = sorted(perms)
+    out_names = [st.lhs.name for st in plan.body]
+
+    bh = block_rows
+    n_blocks = -(-extents[0] // bh)
+    dt = jnp.result_type(*[env[nm] for nm in base_names])
+
+    # ---- prepare inputs: level-major layout + halo pad + row alignment ----
+    scal = jnp.array([[env[nm] for nm in scalar_names]], dtype=dt) \
+        if scalar_names else jnp.zeros((1, 1), dt)
+    ins = [scal]
+    in_specs = [pl.BlockSpec((1, max(len(scalar_names), 1)), lambda i: (0, 0))]
+    trailing = tuple(extents[1:])
+    for nm in base_names:
+        arr = jnp.asarray(env[nm])
+        arr = jnp.transpose(arr, np.argsort(perms[nm])) \
+            if perms[nm] != tuple(range(arr.ndim)) else arr
+        lvls = levels_of[nm]
+        # zero-pad by the (aux-accumulated) halo first — the halo may exceed
+        # the array's own margin; cells fabricated from the zero pad only
+        # reach never-consumed aux corners — then slice the touched region
+        arr = jnp.pad(arr, [(pad[l - 1], pad[l - 1]) for l in lvls])
+        sl = [slice(lo[l - 1], lo[l - 1] + extents[l - 1] + 2 * pad[l - 1])
+              for l in lvls]
+        arr = arr[tuple(sl)]
+        nd = arr.ndim
+        if 1 in lvls:  # row-blocked with a 3-block halo window
+            rows_needed = (n_blocks + 2) * bh
+            pre = bh - pad[0]
+            post = rows_needed - arr.shape[0] - pre
+            arr = jnp.pad(arr, [(pre, post)] + [(0, 0)] * (nd - 1))
+            block = (bh,) + tuple(arr.shape[1:])
+            for d in (0, 1, 2):
+                ins.append(arr)
+                in_specs.append(pl.BlockSpec(
+                    block,
+                    partial(lambda i, d, nd: (i + d,) + (0,) * (nd - 1),
+                            d=d, nd=nd)))
+        else:  # row-invariant: single full operand
+            ins.append(arr)
+            in_specs.append(pl.BlockSpec(
+                tuple(arr.shape), lambda i, _nd=nd: (0,) * _nd))
+
+    out_shape = [jax.ShapeDtypeStruct((n_blocks * bh,) + trailing, dt)
+                 for _ in out_names]
+    out_specs = [pl.BlockSpec((bh,) + trailing,
+                              lambda i: (i,) + (0,) * (m - 1))
+                 for _ in out_names]
+
+    kernel = _build_kernel(plan, pad, ext, scalar_names, base_names,
+                           out_names, bh, extents, levels_of)
+    outs = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*ins)
+
+    result = {}
+    for nm, arr in zip(out_names, outs):
+        arr = arr[: extents[0]]
+        # transpose back from level-major to the output's own dim order:
+        # output dim d carries level lhs.subs[d].s -> take level-major axis s-1
+        lhs = next(st.lhs for st in plan.body if st.lhs.name == nm)
+        axes = tuple(s.s - 1 for s in lhs.subs)
+        arr = jnp.transpose(arr, axes) if axes != tuple(range(m)) else arr
+        result[nm] = arr
+    return result

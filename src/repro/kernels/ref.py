@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the RACE stencil kernel: the whole-array evaluator
+from ``repro.core.codegen`` (baseline program and RACE plan produce identical
+values in binary mode; kernel outputs are compared against both), restricted
+to the statement interior the kernel produces."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.codegen import build_baseline_evaluator, build_plan_evaluator
+from repro.core.depgraph import Plan
+
+
+def interior(plan: Plan, full_outputs: dict) -> dict:
+    """Slice evaluator outputs (full-array layout) down to the statement
+    ranges, matching the kernel's return convention."""
+    ranges = plan.program.ranges()
+    out = {}
+    for st in plan.body:
+        arr = full_outputs[st.lhs.name]
+        sl = []
+        for s in st.lhs.subs:
+            lo, hi = ranges[s.s]
+            sl.append(slice(lo + int(s.b), hi + int(s.b) + 1))
+        out[st.lhs.name] = jnp.asarray(arr)[tuple(sl)]
+    return out
+
+
+def reference(plan: Plan, env: dict) -> dict:
+    """Oracle: evaluate the *baseline* program (ground truth semantics)."""
+    return interior(plan, build_baseline_evaluator(plan.program)(env))
+
+
+def reference_plan(plan: Plan, env: dict) -> dict:
+    """Secondary oracle: the transformed-program evaluator (checks that the
+    kernel agrees with the XLA realization of the same plan)."""
+    return interior(plan, build_plan_evaluator(plan)(env))

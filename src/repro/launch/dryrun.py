@@ -1,0 +1,230 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first initialization).
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, get_config  # noqa: E402
+from repro.launch import specs as S  # noqa: E402
+from repro.launch.hlo_analysis import collective_schedule, collective_traffic  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import (SHAPES, ExecConfig, cell_is_runnable,  # noqa: E402
+                          make_decode_step, make_prefill_step, make_train_step)
+from repro.models.model import n_units  # noqa: E402
+from repro.models.sharding import replicated  # noqa: E402
+from repro.optim import AdamWConfig  # noqa: E402
+
+"""Multi-pod dry-run (assignment requirement e).
+
+For every runnable (architecture x shape) cell and each mesh
+(single-pod 16x16, multi-pod 2x16x16):
+
+  * FULL artifact — the scanned full-depth step is lowered and compiled;
+    ``memory_analysis()`` proves the cell fits, the HLO gives the collective
+    *schedule*.
+  * PROBE artifacts (single-pod only) — 1-unit and 2-unit variants with every
+    inner loop unrolled; cost_analysis / parsed collectives difference to
+    per-layer cost, extrapolated to full depth:
+        total = probe1 + (n_units - 1) * (probe2 - probe1)
+    (XLA counts while bodies once regardless of trip count — verified in
+    DESIGN.md section 7 — so probing is the only exact accounting.)
+
+Results cached as JSON per cell under --out (default experiments/dryrun/).
+"""
+
+OUT_DEFAULT = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+
+def _opt_cfg(cfg):
+    big = cfg.n_params() > 5e10
+    return AdamWConfig(factored=cfg.n_params() > 1e11,
+                       m_dtype="bfloat16" if big else "float32")
+
+
+def _mem_stats(compiled):
+    m = compiled.memory_analysis()
+    if m is None:
+        return {}
+    return {k: getattr(m, k) for k in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "alias_size_in_bytes",
+        "generated_code_size_in_bytes") if hasattr(m, k)}
+
+
+def _cost(compiled):
+    ca = compiled.cost_analysis() or {}
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def build_step(cfg, shape, exec_cfg, mesh, nu_override=None):
+    """Returns (fn, args tuple of ShapeDtypeStructs, donate_argnums)."""
+    if shape.mode == "train":
+        opt = _opt_cfg(cfg)
+        p_sds, o_sds = S.param_structs(cfg, mesh, nu_override, opt)
+        b_sds = S.batch_structs_sharded(cfg, mesh, shape)
+        fn = make_train_step(cfg, opt, exec_cfg, n_units_override=nu_override)
+        return fn, (p_sds, o_sds, b_sds), (0, 1)
+    if shape.mode == "prefill":
+        p_sds, _ = S.param_structs(cfg, mesh, nu_override)
+        b_sds = S.batch_structs_sharded(cfg, mesh, shape)
+        fn = make_prefill_step(cfg, exec_cfg, n_units_override=nu_override)
+        return fn, (p_sds, b_sds), ()
+    # decode
+    p_sds, _ = S.param_structs(cfg, mesh, nu_override)
+    c_sds = S.cache_structs(cfg, mesh, shape, nu_override,
+                            kv_quant=exec_cfg.kv_quant)
+    tok = S.decode_token_struct(cfg, mesh, shape)
+    pos = jax.ShapeDtypeStruct((), jnp.int32, sharding=replicated(mesh))
+    fn = make_decode_step(cfg, exec_cfg, max_len=shape.seq_len,
+                          n_units_override=nu_override)
+    return fn, (p_sds, c_sds, tok, pos), (1,)
+
+
+def compile_cell(cfg, shape, mesh, exec_cfg, nu_override=None,
+                 want_hlo=True):
+    fn, args, donate = build_step(cfg, shape, exec_cfg, mesh, nu_override)
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    dt = time.time() - t0
+    rec = {"compile_s": round(dt, 2), "cost": _cost(compiled),
+           "memory": _mem_stats(compiled)}
+    if want_hlo:
+        rec["_hlo"] = compiled.as_text()
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: Path,
+             force: bool = False, exec_overrides: dict = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh_tag = ("multipod" if multi_pod else "pod") + (f".{tag}" if tag else "")
+    out = out_dir / f"{arch}.{shape_name}.{mesh_tag}.json"
+    if out.exists() and not force:
+        return json.loads(out.read_text())
+
+    ok, reason = cell_is_runnable(cfg, shape)
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag,
+        "mode": shape.mode, "runnable": ok, "skip_reason": reason,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "n_units": n_units(cfg),
+    }
+    if not ok:
+        out.write_text(json.dumps(rec, indent=1))
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    import dataclasses as _dc
+
+    ov = exec_overrides or {}
+    rec["exec_overrides"] = ov
+    exec_full = _dc.replace(ExecConfig(unroll_scans=False, mesh=mesh), **ov)
+    try:
+        full = compile_cell(cfg, shape, mesh, exec_full, want_hlo=True)
+        rec["full"] = {k: v for k, v in full.items() if k != "_hlo"}
+        rec["collective_schedule"] = collective_schedule(full["_hlo"])
+        rec["full_collectives"] = collective_traffic(full["_hlo"])["counts"]
+        if not multi_pod:
+            exec_probe = _dc.replace(
+                ExecConfig(unroll_scans=True, probe_chunks=2, mesh=mesh), **ov)
+            probes = {}
+            for nu in (1, 2):
+                p = compile_cell(cfg, shape, mesh, exec_probe,
+                                 nu_override=nu, want_hlo=True)
+                coll = collective_traffic(p["_hlo"])
+                probes[nu] = {"cost": p["cost"], "coll": coll,
+                              "compile_s": p["compile_s"]}
+            rec["probes"] = probes
+            L = rec["n_units"]
+            f1, f2 = probes[1]["cost"]["flops"], probes[2]["cost"]["flops"]
+            b1, b2 = probes[1]["cost"]["bytes"], probes[2]["cost"]["bytes"]
+            c1 = probes[1]["coll"]["bytes"]
+            c2 = probes[2]["coll"]["bytes"]
+            opt = _opt_cfg(cfg)
+            opt_bpp = 2.5 if opt.factored else (6 if opt.m_dtype == "bfloat16" else 8)
+            from repro.launch.hlo_analysis import analytic_hbm_bytes
+
+            rec["totals"] = {
+                "flops_per_device": f1 + (L - 1) * (f2 - f1),
+                "bytes_per_device": b1 + (L - 1) * (b2 - b1),
+                "coll_bytes_per_device": c1 + (L - 1) * (c2 - c1),
+                "analytic_hbm_bytes_per_device": analytic_hbm_bytes(
+                    cfg, SHAPES[shape_name], 256,
+                    opt_bpp if shape.mode == "train" else 0,
+                    logits_bytes_per=2 if exec_full.logits_dtype == "bfloat16" else 4,
+                    kv_bytes_per=1.07 if exec_full.kv_quant else 2),
+                "per_unit": {"flops": f2 - f1, "bytes": b2 - b1,
+                             "coll_bytes": c2 - c1},
+            }
+        rec["ok"] = True
+    except Exception as e:  # record the failure; the harness keeps going
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(rec, indent=1))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--out", default=str(OUT_DEFAULT))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--exec", action="append", default=[],
+                    help="ExecConfig override key=value (perf hillclimb)")
+    ap.add_argument("--tag", default="", help="suffix for the result JSON")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in getattr(args, "exec"):
+        k, v = kv.split("=", 1)
+        overrides[k] = {"true": True, "false": False}.get(
+            v.lower(), int(v) if v.isdigit() else v)
+
+    archs = ARCHS if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_fail = n_skip = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}.{shape}.{'multipod' if mp else 'pod'}"
+                t0 = time.time()
+                rec = run_cell(arch, shape, mp, out_dir, force=args.force,
+                               exec_overrides=overrides, tag=args.tag)
+                if not rec["runnable"]:
+                    n_skip += 1
+                    print(f"SKIP {tag}: {rec['skip_reason']}", flush=True)
+                elif rec.get("ok"):
+                    n_ok += 1
+                    mem = rec.get("full", {}).get("memory", {})
+                    print(f"OK   {tag} ({time.time()-t0:.0f}s) "
+                          f"args={mem.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+                          f"temp={mem.get('temp_size_in_bytes', 0)/2**30:.2f}GiB",
+                          flush=True)
+                else:
+                    n_fail += 1
+                    print(f"FAIL {tag}: {rec['error']}", flush=True)
+    print(f"dry-run complete: {n_ok} ok, {n_fail} failed, {n_skip} skipped")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

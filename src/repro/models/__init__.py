@@ -1,0 +1,6 @@
+from .common import ExecConfig  # noqa: F401
+from .config import SHAPES, ModelConfig, ShapeSpec, cell_is_runnable  # noqa: F401
+from .model import (decode_step, forward_hidden, init_caches, init_params,  # noqa: F401
+                    n_units, prefill_logits, unit_kinds)
+from .steps import (make_decode_step, make_loss_fn, make_prefill_step,  # noqa: F401
+                    make_train_step)

@@ -1,0 +1,329 @@
+"""Attention: GQA with optional qk-norm / qkv-bias / local window / cross
+attention; flash-style doubly-chunked softmax for long contexts (scores never
+materialize beyond one (cq, ck) tile), single-query path for decode.
+
+Layouts: q (B, S, KV, G, dh), k/v (B, S, KV, dh) with G = H / KV.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .common import ExecConfig, apply_rope, dense_init, init_rmsnorm, rmsnorm
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    D, H, KV, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 8)
+    kv_in = cfg.vision_dim if cross else D
+    p = {
+        "wq": dense_init(ks[0], (D, H * dh), dt),
+        "wk": dense_init(ks[1], (kv_in, KV * dh), dt),
+        "wv": dense_init(ks[2], (kv_in, KV * dh), dt),
+        "wo": dense_init(ks[3], (H * dh, D), dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * dh,), dt)
+        p["bk"] = jnp.zeros((KV * dh,), dt)
+        p["bv"] = jnp.zeros((KV * dh,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(dh)
+        p["k_norm"] = init_rmsnorm(dh)
+    return p
+
+
+def _project_qkv(x, kv_src, p, cfg: ModelConfig):
+    B, S, _ = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = x @ p["wq"]
+    k = kv_src @ p["wk"]
+    v = kv_src @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, KV, H // KV, dh)
+    k = k.reshape(B, kv_src.shape[1], KV, dh)
+    v = v.reshape(B, kv_src.shape[1], KV, dh)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    return q, k, v
+
+
+def _chunk_counts(S_q, S_k, exec_cfg: ExecConfig):
+    if exec_cfg.unroll_scans:
+        nq = min(exec_cfg.probe_chunks, S_q)
+        nk = min(exec_cfg.probe_chunks, S_k)
+        unroll = True
+    else:
+        nq = max(1, S_q // max(1, min(exec_cfg.attn_chunk_q, S_q)))
+        nk = max(1, S_k // max(1, min(exec_cfg.attn_chunk_k, S_k)))
+        unroll = 1
+    while S_q % nq:
+        nq -= 1
+    while S_k % nk:
+        nk -= 1
+    return nq, nk, unroll
+
+
+def _tile_mask(pos_q, pos_k, causal: bool, window: int):
+    mask = jnp.ones((pos_q.shape[0], pos_k.shape[0]), bool)
+    if causal:
+        mask &= pos_k[None, :] <= pos_q[:, None]
+    if window > 0:
+        mask &= pos_k[None, :] > pos_q[:, None] - window
+    return mask
+
+
+def _flash_fwd(q, k, v, causal, window, exec_cfg, q_offset):
+    B, Sq, KV, G, dh = q.shape
+    Sk = k.shape[1]
+    nq, nk, unroll = _chunk_counts(Sq, Sk, exec_cfg)
+    cq, ck = Sq // nq, Sk // nk
+    scale = dh ** -0.5
+    qt = q.reshape(B, nq, cq, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    kt = k.reshape(B, nk, ck, KV, dh).transpose(1, 0, 2, 3, 4)
+    vt = v.reshape(B, nk, ck, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def q_body(_, qc_i):
+        qc, iq = qc_i
+        pos_q = q_offset + iq * cq + jnp.arange(cq)
+
+        def k_body(acc, kc_i):
+            kc, vc, ik = kc_i
+            m_prev, l_prev, o_prev = acc
+            pos_k = ik * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(pos_q, pos_k, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_prev, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_prev - m_new)
+            l_new = l_prev * corr + p.sum(-1)
+            pv = jnp.einsum("bkgqc,bckd->bkgqd", p.astype(vc.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            o_new = o_prev * corr[..., None] + pv
+            return (m_new, l_new, o_new), None
+
+        init = (
+            jnp.full((B, KV, G, cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, KV, G, cq), jnp.float32),
+            jnp.zeros((B, KV, G, cq, dh), jnp.float32),
+        )
+        (m, l, o), _ = jax.lax.scan(
+            k_body, init, (kt, vt, jnp.arange(nk)), unroll=unroll)
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))  # (B, KV, G, cq)
+        return None, (o.transpose(0, 3, 1, 2, 4), lse.transpose(0, 3, 1, 2))
+
+    _, (chunks, lses) = jax.lax.scan(q_body, None, (qt, jnp.arange(nq)),
+                                     unroll=unroll)
+    out = chunks.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, dh)
+    lse = lses.transpose(1, 0, 2, 3, 4).reshape(B, Sq, KV, G)
+    return out.astype(q.dtype), lse
+
+
+def _flash_bwd(causal, window, exec_cfg, q_offset, res, dout):
+    """FlashAttention-2-style backward: tiles are *recomputed* from (q, k, v,
+    lse); nothing tile-sized is ever stored across iterations — this is what
+    keeps the train-step temp memory bounded (the naive scan-of-scans
+    backward stacks every (cq, ck) probability tile)."""
+    q, k, v, out, lse = res
+    B, Sq, KV, G, dh = q.shape
+    Sk = k.shape[1]
+    nq, nk, unroll = _chunk_counts(Sq, Sk, exec_cfg)
+    cq, ck = Sq // nq, Sk // nk
+    scale = dh ** -0.5
+    doutf = dout.astype(jnp.float32)
+    D = jnp.sum(doutf * out.astype(jnp.float32), axis=-1)  # (B,Sq,KV,G)
+
+    qt = q.reshape(B, nq, cq, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    dot = doutf.reshape(B, nq, cq, KV, G, dh).transpose(1, 0, 2, 3, 4, 5)
+    lt = lse.reshape(B, nq, cq, KV, G).transpose(1, 0, 2, 3, 4)
+    Dt = D.reshape(B, nq, cq, KV, G).transpose(1, 0, 2, 3, 4)
+    kt = k.reshape(B, nk, ck, KV, dh).transpose(1, 0, 2, 3, 4)
+    vt = v.reshape(B, nk, ck, KV, dh).transpose(1, 0, 2, 3, 4)
+
+    def k_outer(_, kc_i):
+        kc, vc, ik = kc_i
+        pos_k = ik * ck + jnp.arange(ck)
+
+        def q_inner(acc, qc_i):
+            dk_acc, dv_acc = acc
+            qc, doc, lc, Dc, iq = qc_i
+            pos_q = q_offset + iq * cq + jnp.arange(cq)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(pos_q, pos_k, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lc.transpose(0, 2, 3, 1)[..., None])
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Dc.transpose(0, 2, 3, 1)[..., None]) * scale
+            dk_c = jnp.einsum("bkgqc,bqkgd->bckd", ds, qc,
+                              preferred_element_type=jnp.float32)
+            dv_c = jnp.einsum("bkgqc,bqkgd->bckd", p, doc,
+                              preferred_element_type=jnp.float32)
+            return (dk_acc + dk_c, dv_acc + dv_c), None
+
+        init = (jnp.zeros((B, ck, KV, dh), jnp.float32),
+                jnp.zeros((B, ck, KV, dh), jnp.float32))
+        (dk_c, dv_c), _ = jax.lax.scan(
+            q_inner, init, (qt, dot, lt, Dt, jnp.arange(nq)), unroll=unroll)
+        return None, (dk_c, dv_c)
+
+    _, (dks, dvs) = jax.lax.scan(k_outer, None, (kt, vt, jnp.arange(nk)),
+                                 unroll=unroll)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, dh)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, dh)
+
+    def q_outer(_, qc_i):
+        qc, doc, lc, Dc, iq = qc_i
+        pos_q = q_offset + iq * cq + jnp.arange(cq)
+
+        def k_inner(dq_acc, kc_i):
+            kc, vc, ik = kc_i
+            pos_k = ik * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            mask = _tile_mask(pos_q, pos_k, causal, window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lc.transpose(0, 2, 3, 1)[..., None])
+            dp = jnp.einsum("bqkgd,bckd->bkgqc", doc, vc,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - Dc.transpose(0, 2, 3, 1)[..., None]) * scale
+            dq_c = jnp.einsum("bkgqc,bckd->bqkgd", ds, kc,
+                              preferred_element_type=jnp.float32)
+            return dq_acc + dq_c, None
+
+        dq_c, _ = jax.lax.scan(
+            k_inner, jnp.zeros((B, cq, KV, G, dh), jnp.float32),
+            (kt, vt, jnp.arange(nk)), unroll=unroll)
+        return None, dq_c
+
+    _, dqs = jax.lax.scan(q_outer, None, (qt, dot, lt, Dt, jnp.arange(nq)),
+                          unroll=unroll)
+    dq = dqs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, KV, G, dh)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+from functools import partial as _partial
+
+
+@_partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal, window, exec_cfg, q_offset=0):
+    """Online-softmax attention over (q-chunk, k-chunk) tiles with an
+    FA2-style hand-written VJP (recompute, never store tiles).
+
+    Fully-masked tiles are still computed (simplifies cost accounting; the
+    block-skipping optimization is a recorded §Perf candidate)."""
+    out, _ = _flash_fwd(q, k, v, causal, window, exec_cfg, q_offset)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, exec_cfg, q_offset):
+    out, lse = _flash_fwd(q, k, v, causal, window, exec_cfg, q_offset)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, exec_cfg, q_offset, res, dout):
+    return _flash_bwd(causal, window, exec_cfg, q_offset, res, dout)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def attention_block(x, p, cfg: ModelConfig, exec_cfg: ExecConfig,
+                    rope_cache=None, kv_src=None, window: int = 0):
+    """Full-sequence attention (train / prefill)."""
+    B, S, D = x.shape
+    cross = kv_src is not None
+    q, k, v = _project_qkv(x, kv_src if cross else x, p, cfg)
+    if rope_cache is not None and not cross:
+        cos, sin = rope_cache
+        q = apply_rope(q, cos[:S], sin[:S])
+        k = apply_rope(k, cos[:S], sin[:S])
+    out = flash_attention(q, k, v, cfg.causal and not cross, window, exec_cfg)
+    return out.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def _quantize_kv(t):
+    """(B, 1, KV, dh) -> int8 values + per-(B,1,KV) scale (symmetric)."""
+    scale = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def decode_attention_block(x, p, cfg: ModelConfig, cache: dict, pos,
+                           rope_cache=None, window: int = 0):
+    """Single-token decode.  cache: {'k','v'}: (B, Smax, KV, dh); ``pos`` is
+    the current position (scalar int32).  For windowed layers the cache is a
+    ring buffer of size ``window``.  When the cache carries 'k_scale' the KV
+    is int8-quantized (§Perf iteration: decode is KV-bandwidth-bound; int8
+    halves the dominant memory term vs bf16)."""
+    B, S1, D = x.shape
+    assert S1 == 1
+    KV, G, dh = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, cfg.d_head
+    quant = "k_scale" in cache
+    q, k, v = _project_qkv(x, x, p, cfg)
+    if rope_cache is not None:
+        cos, sin = rope_cache
+        pc = jnp.broadcast_to(cos[pos][None, None], (B, 1, dh // 2))
+        ps = jnp.broadcast_to(sin[pos][None, None], (B, 1, dh // 2))
+        q = apply_rope(q, pc, ps)
+        k = apply_rope(k, pc, ps)
+    Smax = cache["k"].shape[1]
+    # windowed layers use a ring buffer: slot i always holds one of the last
+    # Smax positions (softmax is permutation-invariant and RoPE was applied
+    # to k before caching, so ring order is harmless)
+    slot = pos % Smax if window > 0 else pos
+    new_cache = dict(cache)
+    if quant:
+        kq, ks = _quantize_kv(k)
+        vq, vs = _quantize_kv(v)
+        ck = jax.lax.dynamic_update_slice(cache["k"], kq, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], vq, (0, slot, 0, 0))
+        cks = jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, slot, 0))
+        cvs = jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, slot, 0))
+        new_cache.update(k_scale=cks, v_scale=cvs)
+        k_eff = ck.astype(jnp.bfloat16) * cks[..., None].astype(jnp.bfloat16)
+        v_eff = cv.astype(jnp.bfloat16) * cvs[..., None].astype(jnp.bfloat16)
+    else:
+        ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+        k_eff, v_eff = ck, cv
+    new_cache.update(k=ck, v=cv)
+    idx = jnp.arange(Smax)
+    if window > 0:
+        valid = (idx <= slot) | (pos >= Smax)  # unwritten slots invalid
+    else:
+        valid = idx <= pos
+    s = jnp.einsum("bqkgd,bckd->bkgqc", q, k_eff,
+                   preferred_element_type=jnp.float32) * (dh ** -0.5)
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bqkgd", pattn.astype(v_eff.dtype), v_eff,
+                   preferred_element_type=jnp.float32)
+    out = o.astype(x.dtype).reshape(B, 1, cfg.n_heads * dh) @ p["wo"]
+    return out, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, window: int = 0,
+                  quant: bool = False):
+    n = min(window, max_len) if window > 0 else max_len
+    shape = (batch, n, cfg.n_kv_heads, cfg.d_head)
+    if quant:
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(shape[:3], jnp.bfloat16),
+                "v_scale": jnp.zeros(shape[:3], jnp.bfloat16)}
+    dt = jnp.dtype(cfg.dtype)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}

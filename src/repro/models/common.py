@@ -1,0 +1,205 @@
+"""Shared model components: norms, RoPE (via the RACE-derived hoisting plan),
+embeddings, initializers, and the execution-mode knobs used by the dry-run
+probes."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+@dataclass(frozen=True)
+class ExecConfig:
+    """Execution knobs.
+
+    ``unroll_scans`` is used by the dry-run cost probes: XLA's cost_analysis
+    counts a while-loop body once regardless of trip count, so probe compiles
+    unroll every inner scan (attention chunks, ssm chunks, loss chunks) with a
+    small fixed chunk *count*; real compiles use fixed chunk *sizes* with
+    compact while-loops (DESIGN.md section 7).
+
+    ``mesh`` (optional) activates explicit activation sharding constraints:
+    sequence-parallel residual streams between layer units for attention
+    archs, vocab-sharded loss logits — the constraints that keep the per-
+    device footprint bounded at production shapes.
+    """
+
+    unroll_scans: bool = False
+    probe_chunks: int = 2      # chunk count in unrolled (probe) mode
+    attn_chunk_q: int = 256
+    attn_chunk_k: int = 1024
+    ssm_chunk: int = 256
+    loss_chunk: int = 512
+    remat: bool = True
+    mesh: object = None
+    seq_parallel: bool = True
+    # ---- §Perf hillclimb knobs (EXPERIMENTS.md) ----
+    logits_dtype: str = "float32"   # 'bfloat16' halves CE-logits HBM traffic
+    remat_policy: str = "nothing"   # 'dots' saves matmul outputs (less recompute)
+    kv_quant: bool = False          # int8 KV cache for decode
+    moe_chunk: int = 65536          # tokens per MoE dispatch chunk
+    ssm_pin: bool = True            # pin mamba intermediates to 'model' sharding
+    ssm_bf16: bool = False          # bf16 post-scan gating chain (halves its grad ARs)
+
+    def constrain(self, x, *spec):
+        """with_sharding_constraint iff a mesh was provided and every
+        sharded dim divides."""
+        if self.mesh is None:
+            return x
+        import numpy as _np
+
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        fitted = []
+        for dim, axes in zip(x.shape, spec):
+            if axes is None:
+                fitted.append(None)
+                continue
+            ax_tuple = (axes,) if isinstance(axes, str) else tuple(axes)
+            ax_tuple = tuple(a for a in ax_tuple if a in sizes)
+            n = int(_np.prod([sizes[a] for a in ax_tuple])) if ax_tuple else 1
+            fitted.append(ax_tuple if ax_tuple and dim % n == 0 and dim >= n else None)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, PartitionSpec(*fitted)))
+
+    def batch_axes(self) -> tuple:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+
+def dtype_of(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x, scale, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def init_rmsnorm(d: int):
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE — cache built from the RACE layer-loop hoisting plan
+# ---------------------------------------------------------------------------
+
+
+def rope_angles(positions, d_head: int, theta: float):
+    """angles[p, i] = p * theta^(-2i/d).  ``repro.core.integration`` proves
+    via rpi/eri that the per-layer cos/sin of these angles is loop-invariant
+    across the layer axis (empty exprDelta on it) and hoists it; models
+    therefore consume this cache once instead of L times."""
+    half = d_head // 2
+    freqs = theta ** (-np.arange(0, half) * 2.0 / d_head)
+    ang = positions.astype(jnp.float32)[..., None] * freqs[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, ..., d_head) with sequence at axis 1 and head dim last;
+    cos/sin: (S, d_head/2) shared across rows, or (B, S, d_head/2) for
+    per-row decode positions.  Broadcasts rank-generically (q is 5-D
+    (B, S, KV, G, dh), k is 4-D (B, S, KV, dh))."""
+    half = x.shape[-1] // 2
+    shape = [1] * x.ndim
+    shape[1] = x.shape[1]
+    shape[-1] = half
+    if cos.ndim == 3:  # (B, S, half)
+        shape[0] = x.shape[0]
+    cos = cos.reshape(shape)
+    sin = sin.reshape(shape)
+    xf = x.astype(jnp.float32)
+    x1f, x2f = xf[..., :half], xf[..., half:]
+    out = jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[-2] if len(shape) > 1 else shape[0]
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def stack_init(key, n: int, fn):
+    """Stack per-layer params along a leading L axis (for lax.scan)."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def keygen(key):
+    """Infinite deterministic key splitter."""
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub
+
+
+# ---------------------------------------------------------------------------
+# loss (vocab-chunked cross-entropy; the logits never fully materialize)
+# ---------------------------------------------------------------------------
+
+
+def chunked_ce_loss(h, w_out, labels, exec_cfg: ExecConfig, mask=None):
+    """h: (B, S, D); w_out: (D, V) (vocab usually model-sharded);
+    labels: (B, S) int32.  Scans over sequence chunks so the (B, S, V)
+    logits tensor never exists; accumulates f32 sum-loss and count."""
+    B, S, D = h.shape
+    if exec_cfg.unroll_scans:
+        n_chunks = min(exec_cfg.probe_chunks, S)
+        unroll = True
+    else:
+        n_chunks = max(1, S // max(1, min(exec_cfg.loss_chunk, S)))
+        unroll = 1
+    while S % n_chunks:
+        n_chunks -= 1
+    C = S // n_chunks
+    hs = h.reshape(B, n_chunks, C, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, C).transpose(1, 0, 2)
+    ms = None
+    if mask is not None:
+        ms = mask.reshape(B, n_chunks, C).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        if ms is None:
+            hc, lc = xs
+            mc = jnp.ones(lc.shape, jnp.float32)
+        else:
+            hc, lc, mc = xs
+            mc = mc.astype(jnp.float32)
+        acc_dt = jnp.dtype(exec_cfg.logits_dtype)
+        logits = jnp.einsum("bcd,dv->bcv", hc, w_out,
+                            preferred_element_type=acc_dt)
+        logits = exec_cfg.constrain(logits, exec_cfg.batch_axes(), None, "model")
+        logits = logits.astype(jnp.float32)  # reductions stay f32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, lc[..., None], axis=-1)[..., 0]
+        loss_sum, cnt = acc
+        return (loss_sum + ((lse - gold) * mc).sum(), cnt + mc.sum()), None
+
+    # checkpoint: the (B, C, V) logits are recomputed in the backward pass
+    # instead of being saved per chunk (they dominate memory otherwise)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    xs = (hs, ls) if ms is None else (hs, ls, ms)
+    (loss_sum, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                      xs, unroll=unroll)
+    return loss_sum / jnp.maximum(cnt, 1.0)

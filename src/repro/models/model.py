@@ -1,0 +1,342 @@
+"""Model assembly: embedding -> scanned layer units -> norm -> head.
+
+Layers are scanned in *units* so heterogeneous families stay scannable with
+stacked parameters (HLO stays one-unit sized regardless of depth):
+
+  dense/encoder  unit = [attn]                      x L
+  moe            unit = [moe]                       x L   (+ optional dense layer 0)
+  ssm            unit = [mamba]                     x L
+  hybrid         unit = pattern (rglru,rglru,attn)  x L//3 (+ trailing rglru)
+  vlm            unit = [attn x (k-1), cross]       x L//k
+
+``n_units_override`` lets the dry-run build 0/1/2-unit variants with identical
+parameters-per-unit for the cost-probe differencing (DESIGN.md section 7).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, decode_attention_block,
+                        init_attention, init_kv_cache)
+from .common import (ExecConfig, dense_init, init_rmsnorm, keygen, rmsnorm,
+                     rope_angles, stack_init)
+from .config import ModelConfig
+from .moe import init_mlp, init_moe, mlp_block, moe_block
+from .ssm import (init_mamba, init_mamba_cache, init_rglru, init_rglru_cache,
+                  mamba_block, mamba_decode, rglru_block, rglru_decode)
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+
+
+def unit_kinds(cfg: ModelConfig) -> list:
+    if cfg.kind in ("dense", "encoder"):
+        return ["attn"]
+    if cfg.kind == "moe":
+        return ["moe"]
+    if cfg.kind == "ssm":
+        return ["mamba"]
+    if cfg.kind == "hybrid":
+        return list(cfg.pattern)
+    if cfg.kind == "vlm":
+        return ["attn"] * (cfg.cross_every - 1) + ["cross"]
+    raise ValueError(cfg.kind)
+
+
+def prelude_kinds(cfg: ModelConfig) -> list:
+    if cfg.kind == "moe" and cfg.dense_first_layer_ff:
+        return ["dense_attn"]
+    return []
+
+
+def trailing_kinds(cfg: ModelConfig) -> list:
+    if cfg.kind == "hybrid":
+        return list(cfg.pattern[: cfg.num_layers % len(cfg.pattern)])
+    return []
+
+
+def n_units(cfg: ModelConfig) -> int:
+    consumed = len(prelude_kinds(cfg)) + len(trailing_kinds(cfg))
+    return (cfg.num_layers - consumed) // len(unit_kinds(cfg))
+
+
+# ---------------------------------------------------------------------------
+# per-kind blocks
+# ---------------------------------------------------------------------------
+
+
+def init_block(key, cfg: ModelConfig, kind: str):
+    kg = keygen(key)
+    D = cfg.d_model
+    if kind in ("attn", "dense_attn"):
+        d_ff = cfg.dense_first_layer_ff if kind == "dense_attn" else cfg.d_ff
+        return {
+            "ln1": init_rmsnorm(D), "attn": init_attention(next(kg), cfg),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(next(kg), cfg, d_ff=d_ff),
+        }
+    if kind == "cross":
+        return {
+            "ln1": init_rmsnorm(D),
+            "attn": init_attention(next(kg), cfg, cross=True),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(next(kg), cfg),
+        }
+    if kind == "moe":
+        return {
+            "ln1": init_rmsnorm(D), "attn": init_attention(next(kg), cfg),
+            "ln2": init_rmsnorm(D), "moe": init_moe(next(kg), cfg),
+        }
+    if kind == "mamba":
+        return {"ln1": init_rmsnorm(D), "mamba": init_mamba(next(kg), cfg)}
+    if kind == "rglru":
+        return {
+            "ln1": init_rmsnorm(D), "rglru": init_rglru(next(kg), cfg),
+            "ln2": init_rmsnorm(D), "mlp": init_mlp(next(kg), cfg),
+        }
+    raise ValueError(kind)
+
+
+def apply_block(x, p, cfg, exec_cfg, kind, rope_cache, vision=None):
+    if kind in ("attn", "dense_attn"):
+        window = cfg.window if cfg.kind == "hybrid" else 0
+        x = x + attention_block(rmsnorm(x, p["ln1"]), p["attn"], cfg, exec_cfg,
+                                rope_cache=rope_cache, window=window)
+        return x + mlp_block(rmsnorm(x, p["ln2"]), p["mlp"])
+    if kind == "cross":
+        x = x + attention_block(rmsnorm(x, p["ln1"]), p["attn"], cfg, exec_cfg,
+                                kv_src=vision)
+        return x + mlp_block(rmsnorm(x, p["ln2"]), p["mlp"])
+    if kind == "moe":
+        x = x + attention_block(rmsnorm(x, p["ln1"]), p["attn"], cfg, exec_cfg,
+                                rope_cache=rope_cache)
+        return x + moe_block(rmsnorm(x, p["ln2"]), p["moe"], cfg,
+                              exec_cfg=exec_cfg)
+    if kind == "mamba":
+        return x + mamba_block(rmsnorm(x, p["ln1"]), p["mamba"], cfg, exec_cfg)
+    if kind == "rglru":
+        x = x + rglru_block(rmsnorm(x, p["ln1"]), p["rglru"], cfg, exec_cfg)
+        return x + mlp_block(rmsnorm(x, p["ln2"]), p["mlp"])
+    raise ValueError(kind)
+
+
+def decode_block(x, p, cfg, exec_cfg, kind, cache, pos, rope_cache):
+    if kind in ("attn", "dense_attn", "moe"):
+        window = cfg.window if cfg.kind == "hybrid" else 0
+        a, new_kv = decode_attention_block(
+            rmsnorm(x, p["ln1"]), p["attn"], cfg, cache, pos,
+            rope_cache=rope_cache, window=window)
+        x = x + a
+        if kind == "moe":
+            return x + moe_block(rmsnorm(x, p["ln2"]), p["moe"], cfg,
+                              exec_cfg=exec_cfg), new_kv
+        return x + mlp_block(rmsnorm(x, p["ln2"]), p["mlp"]), new_kv
+    if kind == "cross":
+        # vision K/V are precomputed in the cache; no update, no mask
+        from .attention import NEG_INF  # noqa: F401  (documentation import)
+        q_in = rmsnorm(x, p["ln1"])
+        B = x.shape[0]
+        KV, dh = cfg.n_kv_heads, cfg.d_head
+        q = (q_in @ p["attn"]["wq"]).reshape(B, 1, KV, cfg.n_heads // KV, dh)
+        s = jnp.einsum("bqkgd,bckd->bkgqc", q, cache["k"],
+                       preferred_element_type=jnp.float32) * (dh ** -0.5)
+        w = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqc,bckd->bqkgd", w.astype(cache["v"].dtype),
+                       cache["v"], preferred_element_type=jnp.float32)
+        x = x + o.astype(x.dtype).reshape(B, 1, cfg.n_heads * dh) @ p["attn"]["wo"]
+        return x + mlp_block(rmsnorm(x, p["ln2"]), p["mlp"]), cache
+    if kind == "mamba":
+        y, new_c = mamba_decode(rmsnorm(x, p["ln1"]), p["mamba"], cfg, cache, exec_cfg)
+        return x + y, new_c
+    if kind == "rglru":
+        y, new_c = rglru_decode(rmsnorm(x, p["ln1"]), p["rglru"], cfg, cache, exec_cfg)
+        x = x + y
+        return x + mlp_block(rmsnorm(x, p["ln2"]), p["mlp"]), new_c
+    raise ValueError(kind)
+
+
+def init_block_cache(cfg: ModelConfig, kind: str, batch: int, max_len: int,
+                     kv_quant: bool = False):
+    if kind in ("attn", "dense_attn", "moe"):
+        window = cfg.window if cfg.kind == "hybrid" else 0
+        return init_kv_cache(cfg, batch, max_len, window=window, quant=kv_quant)
+    if kind == "cross":
+        return {
+            "k": jnp.zeros((batch, cfg.vision_tokens, cfg.n_kv_heads, cfg.d_head),
+                           jnp.dtype(cfg.dtype)),
+            "v": jnp.zeros((batch, cfg.vision_tokens, cfg.n_kv_heads, cfg.d_head),
+                           jnp.dtype(cfg.dtype)),
+        }
+    if kind == "mamba":
+        return init_mamba_cache(cfg, batch)
+    if kind == "rglru":
+        return init_rglru_cache(cfg, batch)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# model init / forward / decode
+# ---------------------------------------------------------------------------
+
+
+def init_params(key, cfg: ModelConfig, n_units_override: Optional[int] = None):
+    kg = keygen(key)
+    dt = jnp.dtype(cfg.dtype)
+    nu = n_units(cfg) if n_units_override is None else n_units_override
+    uk = unit_kinds(cfg)
+
+    def init_unit(k):
+        ks = jax.random.split(k, len(uk))
+        return tuple(init_block(ki, cfg, kind) for ki, kind in zip(ks, uk))
+
+    p = {
+        "units": stack_init(next(kg), nu, init_unit) if nu > 0 else None,
+        "prelude": tuple(init_block(next(kg), cfg, k) for k in prelude_kinds(cfg)),
+        "trailing": tuple(init_block(next(kg), cfg, k) for k in trailing_kinds(cfg)),
+        "ln_f": init_rmsnorm(cfg.d_model),
+        "head": dense_init(next(kg), (cfg.d_model, cfg.vocab), dt),
+    }
+    if cfg.input_embed_dim:
+        p["in_proj"] = dense_init(next(kg), (cfg.input_embed_dim, cfg.d_model), dt)
+    else:
+        p["embed"] = dense_init(next(kg), (cfg.vocab, cfg.d_model), dt)
+    return p
+
+
+def _rope_cache(cfg: ModelConfig, max_pos: int):
+    if cfg.kind in ("ssm",) or cfg.input_embed_dim:
+        return None
+    pos = jnp.arange(max_pos)
+    return rope_angles(pos, cfg.d_head, cfg.rope_theta)
+
+
+def forward_hidden(params, cfg: ModelConfig, exec_cfg: ExecConfig, batch: dict,
+                   n_units_override: Optional[int] = None):
+    """Returns final hidden states (B, S, D); the head is applied by the
+    caller (chunked loss for training, last-position logits for prefill)."""
+    if cfg.input_embed_dim:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype)) @ params["in_proj"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    S = x.shape[1]
+    rope = _rope_cache(cfg, S)
+    vision = batch.get("vision")
+
+    for p, kind in zip(params["prelude"], prelude_kinds(cfg)):
+        x = apply_block(x, p, cfg, exec_cfg, kind, rope, vision)
+
+    uk = unit_kinds(cfg)
+    # sequence-parallel residual stream between units (the saved scan carry
+    # shrinks by the 'model' axis); recurrent families keep time unsharded —
+    # their recurrence runs along S
+    seq_ax = "model" if (exec_cfg.seq_parallel
+                         and cfg.kind not in ("ssm", "hybrid")) else None
+
+    def unit_body(x, unit_params):
+        x = exec_cfg.constrain(x, exec_cfg.batch_axes(), seq_ax, None)
+        for p, kind in zip(unit_params, uk):
+            x = apply_block(x, p, cfg, exec_cfg, kind, rope, vision)
+        return x, None
+
+    if exec_cfg.remat:
+        policy = {
+            "nothing": jax.checkpoint_policies.nothing_saveable,
+            "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+        }[exec_cfg.remat_policy]
+        unit_body = jax.checkpoint(unit_body, policy=policy)
+    if params["units"] is not None:
+        if exec_cfg.unroll_scans:
+            # probe mode: python-unroll the unit loop too, so cost_analysis
+            # sees every unit exactly once (no while-loop undercounting)
+            nu = jax.tree.leaves(params["units"])[0].shape[0]
+            for i in range(nu):
+                unit = jax.tree.map(lambda a: a[i], params["units"])
+                x, _ = unit_body(x, unit)
+        else:
+            x, _ = jax.lax.scan(unit_body, x, params["units"])
+
+    for p, kind in zip(params["trailing"], trailing_kinds(cfg)):
+        x = apply_block(x, p, cfg, exec_cfg, kind, rope, vision)
+    x = exec_cfg.constrain(x, exec_cfg.batch_axes(), seq_ax, None)
+    return rmsnorm(x, params["ln_f"])
+
+
+def prefill_logits(params, cfg, exec_cfg, batch, n_units_override=None):
+    """Inference-prefill: next-token logits for the last position (B, V)."""
+    h = forward_hidden(params, cfg, exec_cfg, batch, n_units_override)
+    return (h[:, -1] @ params["head"]).astype(jnp.float32)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int,
+                n_units_override: Optional[int] = None,
+                kv_quant: bool = False):
+    nu = n_units(cfg) if n_units_override is None else n_units_override
+    uk = unit_kinds(cfg)
+
+    def one_unit(_):
+        return tuple(init_block_cache(cfg, k, batch, max_len, kv_quant)
+                     for k in uk)
+
+    units = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[one_unit(i) for i in range(nu)]
+    ) if nu > 0 else None
+    return {
+        "units": units,
+        "prelude": tuple(init_block_cache(cfg, k, batch, max_len, kv_quant)
+                         for k in prelude_kinds(cfg)),
+        "trailing": tuple(init_block_cache(cfg, k, batch, max_len, kv_quant)
+                          for k in trailing_kinds(cfg)),
+    }
+
+
+def decode_step(params, caches, cfg: ModelConfig, exec_cfg: ExecConfig,
+                token, pos, rope_cache=None, max_len: int = 0):
+    """One decode step.  token: (B, 1) int32; pos: scalar int32.
+    Returns (logits (B, V) f32, new caches)."""
+    x = params["embed"][token]
+    rope = rope_cache
+    if rope is None and cfg.kind not in ("ssm",):
+        rope = _rope_cache(cfg, max_len)
+
+    new_pre = []
+    for p, c, kind in zip(params["prelude"], caches["prelude"], prelude_kinds(cfg)):
+        x, nc = decode_block(x, p, cfg, exec_cfg, kind, c, pos, rope)
+        new_pre.append(nc)
+
+    uk = unit_kinds(cfg)
+
+    def unit_body(x, pc):
+        unit_params, unit_caches = pc
+        new_caches = []
+        for p, c, kind in zip(unit_params, unit_caches, uk):
+            x, nc = decode_block(x, p, cfg, exec_cfg, kind, c, pos, rope)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    new_units = None
+    if params["units"] is not None:
+        if exec_cfg.unroll_scans:  # probe mode (see forward_hidden)
+            nu = jax.tree.leaves(params["units"])[0].shape[0]
+            outs = []
+            for i in range(nu):
+                unit = jax.tree.map(lambda a: a[i], params["units"])
+                uc = jax.tree.map(lambda a: a[i], caches["units"])
+                x, nc = unit_body(x, (unit, uc))
+                outs.append(nc)
+            new_units = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        else:
+            x, new_units = jax.lax.scan(unit_body, x,
+                                        (params["units"], caches["units"]))
+
+    new_tr = []
+    for p, c, kind in zip(params["trailing"], caches["trailing"], trailing_kinds(cfg)):
+        x, nc = decode_block(x, p, cfg, exec_cfg, kind, c, pos, rope)
+        new_tr.append(nc)
+
+    h = rmsnorm(x, params["ln_f"])
+    logits = (h[:, 0] @ params["head"]).astype(jnp.float32)
+    return logits, {"units": new_units, "prelude": tuple(new_pre),
+                    "trailing": tuple(new_tr)}

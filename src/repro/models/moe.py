@@ -1,0 +1,156 @@
+"""SwiGLU MLP and Mixture-of-Experts via sorted grouped-GEMM dispatch.
+
+MoE dispatch: tokens are top-k routed, flattened to (tokens*k), sorted by
+expert id, run through ``jax.lax.ragged_dot`` grouped GEMMs (FLOPs scale with
+*active* parameters only — no capacity padding, no dropping), then combined
+with gate weights via scatter-add.  Expert weights are tensor-sharded on the
+'model' axis (expert-TP); the all-to-all expert-parallel layout is a recorded
+§Perf alternative.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import dense_init
+from .config import ModelConfig
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0):
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], (D, F), dt),
+        "w_up": dense_init(ks[1], (D, F), dt),
+        "w_down": dense_init(ks[2], (F, D), dt),
+    }
+
+
+def mlp_block(x, p):
+    g = x @ p["w_gate"]
+    u = x @ p["w_up"]
+    return (jax.nn.silu(g) * u) @ p["w_down"]
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    dt = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), dt),
+        "w_up": dense_init(ks[2], (E, D, F), dt),
+        "w_down": dense_init(ks[3], (E, F, D), dt),
+    }
+    if cfg.moe_shared:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.moe_shared * F)
+    return p
+
+
+def _no_chunk(exec_cfg):
+    import dataclasses
+
+    return dataclasses.replace(exec_cfg, moe_chunk=0, unroll_scans=False)
+
+
+def _route(x, p, cfg: ModelConfig):
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    xf = x.reshape(T, D)
+    logits = xf.astype(jnp.float32) @ p["router"]
+    top_vals, top_idx = jax.lax.top_k(logits, K)  # (T, K)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    expert_flat = top_idx.reshape(T * K)
+    token_flat = jnp.repeat(jnp.arange(T), K)
+    gate_flat = gates.reshape(T * K)
+    order = jnp.argsort(expert_flat)
+    return xf, expert_flat, token_flat, gate_flat, order
+
+
+def moe_block(x, p, cfg: ModelConfig, impl: str = "capacity", exec_cfg=None):
+    """x: (B, S, D) -> (B, S, D).  (exec_cfg enables sharding constraints.)
+
+    'capacity' (default): tokens are bucketed into (E, C, D) expert buffers
+    (C = T*K*capacity_factor/E; overflow drops, standard GShard/MaxText
+    semantics) and run through batched einsum GEMMs — FLOPs scale with
+    *active* params x capacity factor and XLA's cost model counts them
+    faithfully on every backend.
+
+    'ragged': sorted grouped-GEMM via jax.lax.ragged_dot (no dropping; the
+    megablox-style TPU path).  XLA:CPU decomposes ragged_dot into dense
+    all-expert compute, which wrecks dry-run cost accounting — recorded in
+    EXPERIMENTS.md §Perf; keep it for real-TPU runs."""
+    B, S, D = x.shape
+    E, K = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+
+    # token-chunked execution: the sort/dispatch working set (gathered xs,
+    # expert buffers) is bounded by one chunk instead of the full global
+    # batch (capacity becomes per-chunk, mirroring per-device dispatch)
+    chunk = getattr(exec_cfg, "moe_chunk", 0) if exec_cfg is not None else 0
+    if exec_cfg is not None and exec_cfg.unroll_scans:
+        n_chunks = min(exec_cfg.probe_chunks, T)
+        while T % n_chunks:
+            n_chunks -= 1
+    elif chunk and T > chunk:
+        n_chunks = T // chunk
+        while T % n_chunks:
+            n_chunks -= 1
+    else:
+        n_chunks = 1
+    if n_chunks > 1:
+        xc = x.reshape(n_chunks, 1, T // n_chunks, D)
+
+        def body(_, xchunk):
+            return None, moe_block(xchunk, p, cfg, impl=impl,
+                                   exec_cfg=None if exec_cfg is None else
+                                   _no_chunk(exec_cfg))
+
+        unroll = True if (exec_cfg is not None and exec_cfg.unroll_scans) else 1
+        # recompute each chunk in the backward pass: differentiating the
+        # chunk scan would otherwise stack gathered-token residuals per chunk
+        body = jax.checkpoint(body,
+                              policy=jax.checkpoint_policies.nothing_saveable)
+        _, out = jax.lax.scan(body, None, xc, unroll=unroll)
+        # shared experts were computed per chunk inside the recursion
+        return out.reshape(B, S, D)
+
+    xf, expert_flat, token_flat, gate_flat, order = _route(x, p, cfg)
+
+    if impl == "ragged":
+        xs = xf[token_flat[order]]
+        group_sizes = jnp.bincount(expert_flat, length=E).astype(jnp.int32)
+        g = jax.lax.ragged_dot(xs, p["w_gate"], group_sizes)
+        u = jax.lax.ragged_dot(xs, p["w_up"], group_sizes)
+        h = jax.nn.silu(g) * u
+        y = jax.lax.ragged_dot(h, p["w_down"], group_sizes)
+        y = y * gate_flat[order][:, None].astype(y.dtype)
+        out = jnp.zeros((T, D), y.dtype).at[token_flat[order]].add(y)
+    else:
+        C = max(8, int(T * K * cfg.moe_capacity) // E)
+        se = expert_flat[order]
+        group_sizes = jnp.bincount(expert_flat, length=E)
+        group_start = jnp.cumsum(group_sizes) - group_sizes
+        within = jnp.arange(T * K) - group_start[se]
+        keep = within < C
+        slot = jnp.clip(within, 0, C - 1)
+        xs = xf[token_flat[order]] * keep[:, None].astype(xf.dtype)
+        buf = jnp.zeros((E, C, D), xf.dtype).at[se, slot].set(xs)
+        if exec_cfg is not None:
+            # expert buffers: capacity over the data axes, FFN over 'model'
+            buf = exec_cfg.constrain(buf, None, exec_cfg.batch_axes(), None)
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+        if exec_cfg is not None:
+            g = exec_cfg.constrain(g, None, exec_cfg.batch_axes(), "model")
+            u = exec_cfg.constrain(u, None, exec_cfg.batch_axes(), "model")
+        h = jax.nn.silu(g) * u
+        y = jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+        y_tok = y[se, slot] * (gate_flat[order] * keep)[:, None].astype(y.dtype)
+        out = jnp.zeros((T, D), y.dtype).at[token_flat[order]].add(y_tok)
+
+    if cfg.moe_shared:
+        out = out + mlp_block(xf, p["shared"])
+    return out.reshape(B, S, D).astype(x.dtype)

@@ -1,0 +1,62 @@
+"""train_step / prefill_step / decode_step builders (the functions the
+launcher jits with explicit shardings)."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import (AdamWConfig, adamw_update, clip_by_global_norm,
+                         cosine_schedule)
+
+from .common import ExecConfig, chunked_ce_loss
+from .config import ModelConfig
+from .model import decode_step as _decode
+from .model import forward_hidden, prefill_logits
+
+
+def make_loss_fn(cfg: ModelConfig, exec_cfg: ExecConfig,
+                 n_units_override: Optional[int] = None):
+    def loss_fn(params, batch):
+        h = forward_hidden(params, cfg, exec_cfg, batch, n_units_override)
+        return chunked_ce_loss(h, params["head"], batch["labels"], exec_cfg,
+                               mask=batch.get("mask"))
+
+    return loss_fn
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    exec_cfg: ExecConfig,
+                    n_units_override: Optional[int] = None,
+                    total_steps: int = 100_000, warmup: int = 1_000):
+    loss_fn = make_loss_fn(cfg, exec_cfg, n_units_override)
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, opt_cfg.clip_norm)
+        lr = cosine_schedule(opt_state["step"] + 1, opt_cfg.lr, warmup,
+                             total_steps)
+        new_params, new_opt = adamw_update(params, grads, opt_state, opt_cfg, lr)
+        metrics = {"loss": loss, "gnorm": gnorm, "lr": lr}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, exec_cfg: ExecConfig,
+                      n_units_override: Optional[int] = None):
+    def prefill_step(params, batch):
+        return prefill_logits(params, cfg, exec_cfg, batch, n_units_override)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, exec_cfg: ExecConfig, max_len: int,
+                     n_units_override: Optional[int] = None):
+    def decode_one(params, caches, token, pos):
+        return _decode(params, caches, cfg, exec_cfg, token, pos,
+                       max_len=max_len)
+
+    return decode_one

@@ -1,0 +1,3 @@
+from .adamw import (AdamWConfig, adamw_init, adamw_update, clip_by_global_norm,
+                    cosine_schedule)  # noqa: F401
+from .compression import ef_int8_compress, ef_int8_decompress  # noqa: F401

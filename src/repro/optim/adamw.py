@@ -1,0 +1,115 @@
+"""AdamW with optional factored second moment (Adafactor-style) and
+low-precision first moment — the states for a 314B-parameter model must not
+cost 12 bytes/param (DESIGN.md section 6).
+
+  plain    : m f32 + v f32            (8 bytes/param extra)
+  m_bf16   : m bf16 + v f32           (6 bytes/param)
+  factored : m bf16 + row/col v f32   (~2 bytes/param)  — used by grok-314b
+
+Optimizer state is stored as a *tuple of per-leaf dicts* parallel to
+``jax.tree.leaves(params)`` (keeps pytree structures independent of the
+param-tree nesting, which matters for sharding trees and checkpoints).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    factored: bool = False
+    m_dtype: str = "float32"
+    clip_norm: float = 1.0
+
+
+def cosine_schedule(step, base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def _factorable(p) -> bool:
+    return p.ndim >= 2 and p.shape[-1] >= 2 and p.shape[-2] >= 2
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.m_dtype)
+
+    def leaf(p):
+        m = jnp.zeros_like(p, dtype=mdt)
+        if cfg.factored and _factorable(p):
+            return {"m": m,
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"m": m, "v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"mu": tuple(leaf(p) for p in jax.tree.leaves(params)),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def opt_state_shardings(param_shardings, replicated, cfg: AdamWConfig):
+    """Shardings tree matching adamw_init's structure.  Factored vr/vc drop
+    the reduced axis's sharding."""
+
+    def leaf(spec_and_shape):
+        spec, shape = spec_and_shape
+        from jax.sharding import PartitionSpec as P
+
+        if cfg.factored and len(shape) >= 2 and shape[-1] >= 2 and shape[-2] >= 2:
+            sp = list(spec) + [None] * (len(shape) - len(spec))
+            return {"m": spec,
+                    "vr": P(*sp[:-1]),
+                    "vc": P(*(sp[:-2] + sp[-1:]))}
+        return {"m": spec, "v": spec}
+
+    return {"mu": tuple(leaf(x) for x in param_shardings),
+            "step": replicated}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig, lr):
+    step = state["step"] + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def leaf(p, g, s):
+        gf = g.astype(jnp.float32)
+        m = cfg.b1 * s["m"].astype(jnp.float32) + (1 - cfg.b1) * gf
+        if "v" in s:
+            v = cfg.b2 * s["v"] + (1 - cfg.b2) * gf * gf
+            vhat = v / b2c
+            new_s = {"m": m.astype(s["m"].dtype), "v": v}
+        else:
+            vr = cfg.b2 * s["vr"] + (1 - cfg.b2) * jnp.mean(gf * gf, axis=-1)
+            vc = cfg.b2 * s["vc"] + (1 - cfg.b2) * jnp.mean(gf * gf, axis=-2)
+            # rank-1 reconstruction: vr x vc / mean(vr)
+            denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), 1e-30)
+            vhat = (vr[..., None] * vc[..., None, :] / denom[..., None]) / b2c
+            new_s = {"m": m.astype(s["m"].dtype), "vr": vr, "vc": vc}
+        upd = (m / b1c) / (jnp.sqrt(vhat) + cfg.eps)
+        upd = upd + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * upd).astype(p.dtype), new_s
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    out = [leaf(p, g, s) for p, g, s in zip(leaves_p, leaves_g, state["mu"])]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in out])
+    return new_params, {"mu": tuple(t[1] for t in out), "step": step}

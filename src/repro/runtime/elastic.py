@@ -1,0 +1,47 @@
+"""Elastic scaling: rebuild the mesh at a new device count and re-shard the
+logical checkpoint onto it.
+
+Checkpoints are saved unsharded-logical (repro.checkpoint), so scaling from
+N to M devices is: build the new mesh -> recompute the sharding trees for it
+-> ``restore_checkpoint(..., shardings=new)``.  Batch-size invariance is
+preserved as long as the global batch still divides the new data axes; the
+deterministic step-addressed pipeline keeps the data order identical."""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import restore_checkpoint
+from repro.launch.mesh import make_mesh
+from repro.models.sharding import params_shardings
+
+
+def reshard_checkpoint(ckpt_dir, like_tree, cfg, mesh_shape, mesh_axes,
+                       step=None):
+    """Restore a checkpoint re-sharded for a new mesh geometry."""
+    mesh = make_mesh(mesh_shape, mesh_axes)
+    shard = {"params": params_shardings(like_tree["params"], mesh, cfg)}
+    if "opt" in like_tree:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+
+        # optimizer moments follow their parameter's sharding
+        flat = jax.tree.leaves(shard["params"])
+
+        def mu_shard(s, pl):
+            out = {"m": s}
+            if "v" in pl:
+                out["v"] = s
+            else:
+                sp = list(s.spec)
+                sp += [None] * (len(pl["vr"].shape) + 1 - len(sp))
+                out["vr"] = NamedSharding(mesh, P(*sp[:-1]))
+                out["vc"] = NamedSharding(mesh, P(*(sp[:-2] + sp[-1:])))
+            return out
+
+        shard["opt"] = {
+            "mu": tuple(mu_shard(s, pl) for s, pl in
+                        zip(flat, like_tree["opt"]["mu"])),
+            "step": NamedSharding(mesh, P()),
+        }
+    state, step = restore_checkpoint(ckpt_dir, like_tree, step=step,
+                                     shardings=shard)
+    return state, step, mesh

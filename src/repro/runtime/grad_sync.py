@@ -1,0 +1,43 @@
+"""Explicit data-parallel gradient synchronization with int8 error-feedback
+compression (DESIGN.md section 6, EXPERIMENTS.md cell-A next levers).
+
+Under pjit the DP all-reduce is implicit in the backward pass; to compress
+it, gradient sync must be explicit: compute *local* (per-DP-shard) gradients
+with shard_map, quantize with error feedback, and all-gather the int8
+payload + scales (4x less DP wire traffic than an f32 ring all-reduce; 2x
+vs bf16).  The de-quantized mean is numerically close and the quantization
+error is carried into the next step (Karimireddy et al. 2019), which keeps
+Adam trajectories stable.
+
+``compressed_psum_tree``: inside a shard_map region, replaces
+``jax.lax.pmean(grads, axis)``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import ef_int8_compress
+
+
+def compressed_pmean(g, err, axis: str):
+    """One leaf: local grad g + carried error -> (synced mean, new error).
+    Wire payload per device: |g| int8 + 1 f32 scale (vs |g| f32 for pmean)."""
+    q, scale, new_err = ef_int8_compress(g.astype(jnp.float32), err)
+    n = jax.lax.psum(1, axis)
+    # gather the int8 payloads + scales, dequantize and average locally
+    qs = jax.lax.all_gather(q, axis)            # (n, ...) int8  <- the wire
+    ss = jax.lax.all_gather(scale, axis)        # (n,) f32
+    mean = jnp.tensordot(ss, qs.astype(jnp.float32), axes=((0,), (0,))) / n
+    return mean.astype(g.dtype), new_err
+
+
+def compressed_pmean_tree(grads, errs, axis: str):
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errs) if errs is not None else [
+        jnp.zeros_like(g, jnp.float32) for g in flat_g]
+    out = [compressed_pmean(g, e, axis) for g, e in zip(flat_g, flat_e)]
+    return (jax.tree.unflatten(treedef, [t[0] for t in out]),
+            jax.tree.unflatten(treedef, [t[1] for t in out]))

@@ -1,0 +1,96 @@
+"""Unit tests for the two-level identification scheme (paper Section 5),
+including every worked example from the paper text."""
+import sys
+
+from repro.core import identify as idf
+from repro.core.ir import Const, FuncName, Ref, Sub, arr, loopnest
+
+loops, (i, j, k) = loopnest(("i", 0, 9), ("j", 0, 9), ("k", 0, 9))
+A, B = arr("A"), arr("B")
+
+
+def test_same_lattice_simple_shift():
+    # A[i][j] and A[i+1][j-1] touch all lattice points of Z^2
+    assert idf.rpi(A[i, j]) == idf.rpi(A[i + 1, j - 1])
+
+
+def test_disjoint_lattices_mod():
+    # A[2i] and A[2i+1] are disjoint; A[2i] and A[2i+2] coincide
+    assert idf.rpi(A[2 * i]) != idf.rpi(A[2 * i + 1])
+    assert idf.rpi(A[2 * i]) == idf.rpi(A[2 * i + 2])
+
+
+def test_partial_overlap_different_coef():
+    # A[2i] vs A[3i]: different coefficient lists => different patterns
+    assert idf.rpi(A[2 * i]) != idf.rpi(A[3 * i])
+
+
+def test_multi_subscript_delta():
+    # paper: A[2i+1][3i+2] and A[2i+3][3i+5] share delta 2/3-1/2 = 1/6
+    assert idf.rpi(A[2 * i + 1, 3 * i + 2]) == idf.rpi(A[2 * i + 3, 3 * i + 5])
+    # but A[2i+1][3i+2] vs A[2i+1][3i+4]: deltas differ
+    assert idf.rpi(A[2 * i + 1, 3 * i + 2]) != idf.rpi(A[2 * i + 1, 3 * i + 4])
+
+
+def test_constant_dims():
+    # A[i][1] and A[i][2] never share elements
+    assert idf.rpi(A[i, 1]) != idf.rpi(A[i, 2])
+    assert idf.rpi(A[i, 1]) == idf.rpi(A[i + 3, 1])
+
+
+def test_scalar_and_const():
+    assert idf.rpi(Ref("s")) == ("ref", "s", (), (), ())
+    assert idf.rpi(Const(2.0)) == ("const", 2.0)
+    assert idf.rpi(FuncName("sin")) == ("fn", "sin")
+
+
+def test_eri_alignment():
+    # paper Section 5.2: A[i]+B[i] vs A[i+1]+B[i+2] are NOT redundant
+    e1 = idf.eri("+", A[i], B[i])
+    e2 = idf.eri("+", A[i + 1], B[i + 2])
+    assert e1 != e2
+    # but A[i]+B[i] vs A[i+1]+B[i+1] are (uniform shift)
+    e3 = idf.eri("+", A[i + 1], B[i + 1])
+    assert e1 == e3
+
+
+def test_eri_disjoint_axes_pure_shift():
+    # A[i]*B[j] vs A[i+1]*B[j+5]: no common level => redundant via 2-D shift
+    assert idf.eri("*", A[i], B[j]) == idf.eri("*", A[i + 1], B[j + 5])
+
+
+def test_commutative_sorting_cases():
+    # paper: A[i]+B[i] redundant with B[i+1]+A[i+1]
+    def canon(x, y):
+        if idf.sort_key(y) < idf.sort_key(x):
+            x, y = y, x
+        return idf.eri("+", x, y)
+
+    assert canon(A[i], B[i]) == canon(B[i + 1], A[i + 1])
+    # A[i]+A[2i] vs A[2i+2]+A[i+1]
+    assert canon(A[i], A[2 * i]) == canon(A[2 * i + 2], A[i + 1])
+    # A[i]+A[i+1] vs A[i+2]+A[i+1]
+    assert canon(A[i], A[i + 1]) == canon(A[i + 2], A[i + 1])
+    # negative: A[i]+A[i+1] vs A[i]+A[i+2]
+    assert canon(A[i], A[i + 1]) != canon(A[i], A[i + 2])
+
+
+def test_exprdelta_example():
+    # paper: e = A[i][2j+1] + B[2i+3][k]
+    xi = idf.ref_info(A[i, 2 * j + 1])
+    yi = idf.ref_info(B[2 * i + 3, k])
+    from fractions import Fraction
+
+    assert dict(xi.first_offset) == {1: Fraction(0), 2: Fraction(1, 2)}
+    assert dict(yi.first_offset) == {1: Fraction(3, 2), 3: Fraction(0)}
+    assert dict(idf.expr_delta(xi, yi)) == {1: Fraction(-3, 2)}
+
+
+def test_member_shift_integrality():
+    # same rpi group guarantees integral iteration shifts
+    from fractions import Fraction
+
+    o1 = idf.member_offsets(A[2 * i], B[3 * i])
+    o2 = idf.member_offsets(A[2 * i + 2], B[3 * i + 3])
+    d = o2[1] - o1[1]
+    assert idf.integral_shift(d) == 1

@@ -1,0 +1,172 @@
+"""Property-based tests (hypothesis) on the system's invariants:
+
+  1. binary-mode RACE is semantics-preserving *bitwise* on random programs;
+  2. reassociated RACE is allclose (f64) on random programs;
+  3. equal eri  =>  equal values at the corresponding shifted iterations;
+  4. Thm 7.1: MIS-on-augmented-graph equals brute-force argmax |S|-|eri(S)|
+     on random Pair Graphs.
+"""
+from fractions import Fraction
+from itertools import combinations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+
+
+@pytest.fixture(autouse=True)
+def _x64():
+    """f64 evaluation scoped to this module (exact-ish reassociation checks)
+    without leaking global x64 state into the bf16 model tests."""
+    with jax.enable_x64(True):
+        yield
+
+
+from repro.core import identify as idf
+from repro.core.ir import (Loop, Node, Program, Ref, Stmt, Sub, arr, call,
+                           loopnest, program)
+from repro.core.pairgraph import PairCand, augment, build_conflicts, mis_exact, objective, solve
+from repro.core.race import race
+
+NAMES = ["A", "B", "C"]
+FUNCS = ["sin", "cos", "sqrt_abs"]  # sqrt of negative avoided via abs
+
+
+def _leaf(draw, m):
+    name = draw(st.sampled_from(NAMES))
+    subs = []
+    for lvl in range(1, m + 1):
+        a = draw(st.sampled_from([1, 1, 1, 2]))
+        b = draw(st.integers(min_value=0, max_value=2))
+        subs.append(Sub(a, lvl, Fraction(b)))
+    return Ref(name, tuple(subs))
+
+
+@st.composite
+def exprs(draw, m=2, depth=3):
+    if depth == 0 or draw(st.booleans()):
+        return _leaf(draw, m)
+    op = draw(st.sampled_from(["+", "+", "*", "-", "call"]))
+    if op == "call":
+        f = draw(st.sampled_from(["sin", "cos"]))
+        return call(f, draw(exprs(m=m, depth=depth - 1)))
+    return Node(op, (draw(exprs(m=m, depth=depth - 1)),
+                     draw(exprs(m=m, depth=depth - 1))))
+
+
+@st.composite
+def programs(draw, m=2):
+    loops, _ = loopnest(*[(f"i{l}", 0, draw(st.integers(4, 7)))
+                          for l in range(1, m + 1)])
+    n_stmt = draw(st.integers(1, 3))
+    outs = [arr(f"out{k}") for k in range(n_stmt)]
+    body = []
+    from repro.core.ir import IdxExpr
+
+    idxs = tuple(IdxExpr(l.level, l.var) for l in loops)
+    for k in range(n_stmt):
+        body.append((outs[k][idxs], draw(exprs(m=m))))
+    return program(loops, body)
+
+
+def _env_for(prog, seed):
+    from repro.core.codegen import required_shapes
+
+    rng = np.random.default_rng(seed)
+    env = {}
+    for nm, shp in required_shapes(prog).items():
+        if shp == ():
+            env[nm] = np.float64(rng.uniform(0.5, 1.5))
+        else:
+            env[nm] = rng.uniform(0.1, 1.0, shp)  # positive: safe for sqrt
+    return env
+
+
+@settings(max_examples=25, deadline=None)
+@given(programs(), st.integers(0, 10_000))
+def test_binary_race_bitwise_exact(prog, seed):
+    res = race(prog)
+    env = _env_for(prog, seed)
+    base = res.baseline_evaluator()(env)
+    opt = res.evaluator()(env)
+    for k in base:
+        assert np.array_equal(np.asarray(base[k]), np.asarray(opt[k])), k
+
+
+@settings(max_examples=20, deadline=None)
+@given(programs(), st.integers(0, 10_000), st.sampled_from([3, 4]))
+def test_reassociated_race_allclose(prog, seed, level):
+    res = race(prog, reassociate=level)
+    env = _env_for(prog, seed)
+    base = res.baseline_evaluator()(env)
+    opt = res.evaluator()(env)
+    for k in base:
+        np.testing.assert_allclose(np.asarray(base[k]), np.asarray(opt[k]),
+                                   rtol=1e-9, atol=1e-9, err_msg=k)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_eri_soundness_shifted_values(data):
+    """If eri(e1) == eri(e2) then e2 at iteration x equals e1 at x + shift."""
+    m = 2
+    draw = data.draw
+    e1 = draw(exprs(m=m, depth=2))
+    # build e2 = e1 shifted by a random iteration offset
+    from repro.core.ir import shift_expr
+
+    d = {1: draw(st.integers(-2, 2)), 2: draw(st.integers(-2, 2))}
+    e2 = shift_expr(e1, d)
+    loops, idxs = loopnest(("i1", 3, 8), ("i2", 3, 8))
+    prog = program(loops, [(arr("o1")[idxs], e1), (arr("o2")[idxs], e2)])
+    res = race(prog)
+    env = _env_for(prog, draw(st.integers(0, 99)))
+    out = res.baseline_evaluator()(env)
+    o1, o2 = np.asarray(out["o1"]), np.asarray(out["o2"])
+    # o2[x] must equal o1 evaluated at x+d wherever both are in range
+    r1 = np.arange(3, 9)
+    for x1 in r1:
+        for x2 in r1:
+            if 3 <= x1 + d[1] <= 8 and 3 <= x2 + d[2] <= 8:
+                np.testing.assert_allclose(
+                    o2[x1, x2], o1[x1 + d[1], x2 + d[2]], rtol=1e-12)
+
+
+@st.composite
+def pair_graphs(draw):
+    n_nodes = draw(st.integers(2, 9))
+    n_colors = draw(st.integers(1, 4))
+    n_slots = draw(st.integers(2, 5))
+    cands = []
+    for vid in range(n_nodes):
+        node = draw(st.integers(0, 2))
+        slots = tuple(sorted(draw(
+            st.lists(st.integers(0, n_slots - 1), min_size=2, max_size=2,
+                     unique=True))))
+        cands.append(PairCand(vid, node, slots, draw(st.integers(0, n_colors - 1)),
+                              {}))
+    return cands
+
+
+@settings(max_examples=60, deadline=None)
+@given(pair_graphs())
+def test_theorem_7_1_mis_reduction(cands):
+    """Brute-force argmax |S|-|eri(S)| over independent sets == the MIS-on-
+    augmented-graph solution's objective (Thm 7.1)."""
+    colors = {c.vid: c.color for c in cands}
+    adj = build_conflicts(cands)
+    vids = sorted(colors)
+
+    best = 0
+    for r in range(len(vids) + 1):
+        for sub in combinations(vids, r):
+            s = set(sub)
+            if any(b in adj[a] for a, b in combinations(sub, 2)):
+                continue
+            best = max(best, objective(s, colors))
+
+    sel = solve(cands, exact_limit=64)
+    got = objective(sel, colors)
+    assert got == best

@@ -1,0 +1,133 @@
+"""Coverage for the remaining paper features: subtraction/division
+rewriting (section 7.1), loop-invariant hoisting via the profit model,
+contraction accounting (Fig 10 proxy), ESR group partitioning, cost models,
+and the source printer."""
+import numpy as np
+
+from repro.core.detect import PaperCost, RooflineCost
+from repro.core.ir import arr, cos, loopnest, program, Scalar
+from repro.core.race import race
+
+
+def _loops2(n=10):
+    return loopnest(("j", 1, n - 2), ("i", 1, n - 2))
+
+
+def test_subtraction_rewriting_sign_groups():
+    """Paper section 7.1: y + z must be identified with -y - z via the
+    factored leading sign."""
+    loops, (j, i) = _loops2()
+    A, B = arr("A"), arr("B")
+    o1, o2 = arr("o1"), arr("o2")
+    prog = program(loops, [
+        (o1[i, j], A[i, j] + B[i, j]),
+        (o2[i, j], (Scalar("c") - A[i, j]) - B[i, j]),  # c + (-A) + (-B)
+    ])
+    res = race(prog, reassociate=3, rewrite_sub=True)
+    # one aux covers both A+B and -(A+B)
+    assert res.n_aux() == 1
+    env = {"A": np.random.rand(10, 10).astype(np.float32),
+           "B": np.random.rand(10, 10).astype(np.float32),
+           "c": np.float32(2.0)}
+    base = res.baseline_evaluator()(env)
+    opt = res.evaluator()(env)
+    for k in base:
+        np.testing.assert_allclose(np.asarray(base[k]), np.asarray(opt[k]),
+                                   rtol=1e-5)
+
+
+def test_division_rewriting():
+    """x/y chains expose shared quotients when rewrite_div is on."""
+    loops, (j, i) = _loops2()
+    A, B, C = arr("A"), arr("B"), arr("C")
+    prog = program(loops, [
+        (arr("o1")[i, j], A[i, j] / B[i, j]),
+        (arr("o2")[i, j], C[i, j] * (A[i, j] / B[i, j])),
+    ])
+    res = race(prog, reassociate=3, rewrite_div=True)
+    assert res.n_aux() >= 1
+    env = {k: (np.random.rand(10, 10) + 0.5).astype(np.float32)
+           for k in ("A", "B", "C")}
+    base = res.baseline_evaluator()(env)
+    opt = res.evaluator()(env)
+    for k in base:
+        np.testing.assert_allclose(np.asarray(base[k]), np.asarray(opt[k]),
+                                   rtol=1e-5)
+
+
+def test_loop_invariant_hoisting_singleton():
+    """A k-invariant subexpression in a 3-D nest hoists even with a single
+    occurrence (paper's profit model: ori = vol(main) > aft = vol(aux))."""
+    loops, (j, k, i) = loopnest(("j", 1, 8), ("k", 1, 8), ("i", 1, 8))
+    m, dx, T = arr("m"), arr("dx"), arr("T")
+    prog = program(loops, [
+        (arr("o")[i, k, j], cos(m[i, j] / dx[i, j]) * T[i, k, j]),
+    ])
+    res = race(prog)
+    hoisted = [a for a in res.plan.aux_order if 2 not in a.levels]
+    assert hoisted, "k-invariant cos(m/dx) should hoist out of the k loop"
+    t = res.op_table()
+    assert t["sincos"] < 0.5  # amortized over the k extent
+
+
+def test_contraction_memory_accounting():
+    """Fig 10 proxy: contracted auxiliary storage is much smaller than
+    uncontracted (windows clip non-innermost levels)."""
+    from repro.apps.paper_kernels import pop_calc_tpoints
+
+    case = pop_calc_tpoints(64, 64)
+    res = race(case.program, reassociate=3)
+    full = res.materialized_elements(contracted=False)
+    small = res.materialized_elements(contracted=True)
+    assert small < 0.35 * full
+
+
+def test_cost_models():
+    paper = PaperCost()
+    assert paper.approve(1.0, 2) and not paper.approve(100.0, 1)
+    hbm = RooflineCost(balance_flops_per_byte=240.0, vmem=False)
+    # n=2 with 1-flop ops: not worth an HBM round-trip
+    assert not hbm.approve(1.0, 2)
+    # transcendental-heavy or high-reuse groups still win
+    assert hbm.approve(20.0, 60)
+    vmem = RooflineCost(vmem=True)
+    assert vmem.approve(1.0, 2)  # Pallas executor: bytes are free in VMEM
+
+
+def test_roofline_cost_model_changes_plan():
+    """cost_model='roofline' extracts strictly fewer aux arrays than the
+    paper model on an add-only stencil (adds are cheaper than HBM)."""
+    from repro.apps.paper_kernels import pop_hdifft_gm
+
+    case = pop_hdifft_gm(12, 12)
+    paper = race(case.program, cost_model=PaperCost())
+    roof = race(case.program, cost_model=RooflineCost(vmem=False))
+    assert roof.n_aux() <= paper.n_aux()
+
+
+def test_esr_outer_partition():
+    """ESR groups split by non-innermost offsets: cos(u[i,j]) vs
+    cos(u[i,j-1]) are separate ESR auxs (j-carried reuse is invisible to
+    ESR) but one RACE group."""
+    loops, (j, i) = _loops2()
+    u = arr("u")
+    prog = program(loops, [
+        (arr("o1")[i, j], cos(u[i, j]) + cos(u[i - 1, j])),
+        (arr("o2")[i, j], cos(u[i, j - 1]) + cos(u[i - 1, j - 1])),
+    ])
+    full = race(prog)
+    esr = race(prog, esr=True)
+    # RACE: one cos aux + one shared-sum aux (it also spots that o1 and o2
+    # are the same sum at a j shift); ESR: two separate cos auxs, no shared
+    # sum, so the j-carried cos reuse is recomputed
+    assert round(full.op_table()["sincos"]) == 1
+    assert round(esr.op_table()["sincos"]) == 2
+    assert full.op_table()["weighted_total"] < esr.op_table()["weighted_total"]
+
+
+def test_source_printer_roundtrip_smoke():
+    from repro.apps.paper_kernels import pop_calc_tpoints
+
+    res = race(pop_calc_tpoints(12, 12).program, reassociate=3)
+    src = res.to_source()
+    assert "aa_" in src and "for j in" in src and "p25" in src

@@ -1,0 +1,88 @@
+"""End-to-end reproduction of the paper's flagship POP calc_tpoints example
+(Section 2, Figures 1-2, Table 1 row 'calc_tpoints')."""
+import numpy as np
+import pytest
+
+from repro.apps.paper_kernels import pop_calc_tpoints
+from repro.core.race import race
+
+
+@pytest.fixture(scope="module")
+def prog():
+    return pop_calc_tpoints(nx=14, ny=12).program
+
+
+def test_race_nr_matches_table1(prog):
+    """RACE-NR (binary, no reassociation): add 9, mul 5, sin/cos 4."""
+    res = race(prog)
+    t = res.op_table()
+    assert round(t["add"]) == 9
+    assert round(t["mul"]) == 5
+    assert round(t["sincos"]) == 4
+
+
+def test_full_race_matches_table1(prog):
+    """Full RACE: 9 auxiliary arrays, 3 iterations, add 6, mul 5, sin/cos 4."""
+    res = race(prog, reassociate=3)
+    assert res.n_aux() == 9
+    assert res.rounds() == 3
+    t = res.op_table()
+    assert round(t["add"]) == 6
+    assert round(t["mul"]) == 5
+    assert round(t["sincos"]) == 4
+    # reduced-ops fraction comparable to the paper's 0.55 (runtime measured)
+    assert res.reduced_ops() > 0.45
+
+
+def test_contraction_structure(prog):
+    """Fig 2 (right): aa_0_0/aa_0_2 inlined; aa_0_1 scalarized (rule 2);
+    windows of 2 on the j level for the double-buffered arrays."""
+    res = race(prog, reassociate=3)
+    plan = res.plan
+    assert len(plan.inlined) == 2  # cos(ulon), sin(ulon) single-use
+    assert len(plan.local) >= 1  # cos(ulat) reused at zero shift in-circle
+    # double-buffered arrays: reuse window 2 along the outer (j) level
+    outer = 1
+    windowed = [n for n, w in plan.windows.items() if w.get(outer) == 2]
+    assert len(windowed) >= 3  # aa_0_3, aa_1_0, aa_1_1 analogues
+
+
+def test_binary_mode_bitwise_exact(prog):
+    res = race(prog)
+    rng = np.random.default_rng(0)
+    env = {
+        "ulon": rng.standard_normal((14, 12)).astype(np.float32),
+        "ulat": rng.standard_normal((14, 12)).astype(np.float32),
+        "p25": np.float32(0.25),
+    }
+    base = res.baseline_evaluator()(env)
+    opt = res.evaluator()(env)
+    for k in base:
+        assert np.array_equal(np.asarray(base[k]), np.asarray(opt[k])), k
+
+
+def test_reassociated_mode_allclose(prog):
+    res = race(prog, reassociate=3)
+    rng = np.random.default_rng(1)
+    env = {
+        "ulon": rng.standard_normal((14, 12)).astype(np.float32),
+        "ulat": rng.standard_normal((14, 12)).astype(np.float32),
+        "p25": np.float32(0.25),
+    }
+    base = res.baseline_evaluator()(env)
+    opt = res.evaluator()(env)
+    for k in base:
+        np.testing.assert_allclose(
+            np.asarray(base[k]), np.asarray(opt[k]), rtol=2e-5, atol=2e-6
+        )
+
+
+def test_esr_weaker_than_race(prog):
+    """ESR(+) only exploits innermost-loop reuse; RACE must save at least as
+    many sin/cos and strictly more overall (the paper's Section 2 argument)."""
+    esr = race(prog, reassociate=3, esr=True)
+    full = race(prog, reassociate=3)
+    assert esr.op_table()["weighted_total"] >= full.op_table()["weighted_total"]
+    # ESR keeps 8 sin/cos per iteration (middle listing of Fig 1): j-carried
+    # cos/sin(ulat/ulon(:, j-1)) reuse is invisible to it
+    assert round(esr.op_table()["sincos"]) >= 8
