@@ -8,19 +8,9 @@ import numpy as np
 import jax
 
 from repro.apps.paper_kernels import get_case
-from repro.core.codegen import required_shapes
 from repro.core.race import race
-
-
-def build_env(case, dtype=np.float32, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    env = {}
-    for nm, shp in required_shapes(case.program).items():
-        if nm in case.scalars or shp == ():
-            env[nm] = dtype(rng.uniform(0.25, 1.0))
-        else:
-            env[nm] = rng.uniform(-1, 1, shp).astype(dtype)
-    return env
+# single source for test/benchmark input generation (same conditioning)
+from repro.testing.differential import build_env  # noqa: F401
 
 
 def variants(case, auto_level: bool = True):

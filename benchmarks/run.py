@@ -20,6 +20,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
+                    help="execution backend for the speedup section; "
+                         "'pallas' adds a RACE-pallas column (cases the "
+                         "capability probe rejects report their reason)")
+    ap.add_argument("--compiled", action="store_true",
+                    help="run the pallas backend compiled (interpret=False); "
+                         "requires a TPU runtime — interpret-mode timings on "
+                         "CPU are correctness signal only")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -29,7 +37,8 @@ def main() -> None:
     sections = [
         ("table1", lambda: table1.run()),
         ("speedup", lambda: speedup.run(
-            cases=["calc_tpoints", "gaussian", "psinv", "derivative"] if args.quick else None)),
+            cases=["calc_tpoints", "gaussian", "psinv", "derivative"] if args.quick else None,
+            backend=args.backend, interpret=not args.compiled)),
         ("scaling", lambda: scaling.run()),
         ("memory", lambda: memory.run()),
     ]

@@ -38,7 +38,14 @@ BENCH_SIZES = {
 }
 
 
-def run(cases=None, print_fn=print, repeats: int = 5):
+def run(cases=None, print_fn=print, repeats: int = 5, backend: str = "xla",
+        interpret: bool = True):
+    """``backend="pallas"`` additionally times the Pallas realization of the
+    RACE plan so the table compares xla vs pallas; ineligible cases report
+    the capability probe's fallback reason instead of a silently-identical
+    number.  ``interpret=True`` (the CPU-container default) times the
+    interpreter — correctness signal only; pass ``interpret=False`` on a TPU
+    runtime (``run.py --compiled``) for meaningful kernel timings."""
     rows = []
     for name in cases or TABLE1_ORDER:
         case = get_case(name, BENCH_SIZES.get(name))
@@ -55,10 +62,26 @@ def run(cases=None, print_fn=print, repeats: int = 5):
         derived = ";".join(f"speedup_{k}={v_:.2f}" for k, v_ in speed.items())
         derived += (f";hlo_sincos={ops_base['sincos']}->{ops_race['sincos']}"
                     f";hlo_mul={ops_base['mul']}->{ops_race['mul']}")
+        if backend == "pallas":
+            from functools import partial
+
+            from repro.core.backend import select_backend
+            from repro.kernels.race_stencil import race_stencil_call
+
+            sel = select_backend(v["RACE"].plan, "auto")
+            if sel.backend == "pallas":
+                fn = partial(race_stencil_call, v["RACE"].plan,
+                             interpret=interpret)
+                t = time_fn(fn, env, repeats)
+                speed["RACE-pallas"] = t_base / t
+                derived += f";speedup_RACE-pallas={t_base / t:.2f}"
+            else:
+                codes = ",".join(r.code for r in sel.capability.reasons)
+                derived += f";pallas_fallback={codes}"
         line = csv_line(f"speedup.{name}", t_base * 1e6, derived)
         print_fn(line)
         rows.append(dict(name=name, t_base=t_base, ops_base=ops_base,
-                         ops_race=ops_race, **speed))
+                         ops_race=ops_race, backend=backend, **speed))
     return rows
 
 

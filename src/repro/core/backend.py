@@ -1,0 +1,214 @@
+"""Execution-backend selection for RACE plans.
+
+Two realizations exist for an executable :class:`~repro.core.depgraph.Plan`:
+
+  * ``"xla"``    — the whole-array JAX evaluator (``codegen``); handles every
+                   program in the paper's scope (gather path for negative
+                   coefficients, repeated levels, constant dims);
+  * ``"pallas"`` — the blocked TPU kernel (``repro.kernels.race_stencil``);
+                   faster on streaming stencils but structurally restricted.
+
+This module is the single place that knows the Pallas restrictions.  The
+probe never raises on an ineligible plan — it returns a :class:`Capability`
+whose ``reasons`` say *why* the plan must stay on XLA, so callers (the
+``auto`` backend, the differential harness, the coverage matrix) can report
+fallbacks instead of silently degrading.
+
+The probe is pure plan analysis: it imports neither ``jax.experimental.pallas``
+nor the kernel module, so asking "would this lower?" is free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from fractions import Fraction
+
+from .depgraph import Plan
+from .ir import Expr, Ref, expr_refs
+
+BACKENDS = ("xla", "pallas", "auto")
+
+#: machine-readable fallback codes (stable API for tests / the harness)
+R_DEPTH = "depth"
+R_LHS_FORM = "lhs-form"
+R_CONSTANT_DIM = "constant-dim"
+R_REPEATED_LEVEL = "repeated-level"
+R_NEGATIVE_COEF = "negative-coefficient"
+R_ZERO_COEF = "zero-coefficient"
+R_FRACTIONAL_OFFSET = "fractional-offset"
+R_MIXED_STRIDE = "mixed-stride"
+R_INCONSISTENT_LAYOUT = "inconsistent-layout"
+R_STRIDED_AUX = "strided-aux"
+
+
+@dataclass(frozen=True)
+class FallbackReason:
+    """One structural obstacle to the Pallas path."""
+
+    code: str
+    detail: str
+
+    def __str__(self) -> str:  # pragma: no cover - repr sugar
+        return f"{self.code}: {self.detail}"
+
+
+@dataclass(frozen=True)
+class Capability:
+    """Result of probing a plan for Pallas eligibility."""
+
+    eligible: bool
+    reasons: tuple = ()
+
+    def explain(self) -> str:
+        if self.eligible:
+            return "pallas-eligible"
+        return "; ".join(str(r) for r in self.reasons)
+
+
+@dataclass(frozen=True)
+class Selection:
+    """A resolved backend choice plus the probe that justified it."""
+
+    backend: str  # "xla" | "pallas"
+    requested: str
+    capability: Capability
+
+    @property
+    def fell_back(self) -> bool:
+        return self.requested in ("pallas", "auto") and self.backend == "xla"
+
+
+class BackendUnavailable(RuntimeError):
+    """Raised when ``backend="pallas"`` is demanded for an ineligible plan."""
+
+    def __init__(self, capability: Capability):
+        self.capability = capability
+        super().__init__(
+            f"plan cannot take the Pallas path: {capability.explain()}"
+        )
+
+
+def _probe_ref(r: Ref, per_array: dict, reasons: list, where: str) -> None:
+    """Accumulate per-array layout facts; record reasons on violations."""
+    seen_levels = []
+    layout = []  # (level, coef) in dim order
+    for s in r.subs:
+        if s.s == 0:
+            reasons.append(FallbackReason(
+                R_CONSTANT_DIM, f"{r.name} has a constant dimension ({where})"))
+            return
+        if s.a < 0:
+            reasons.append(FallbackReason(
+                R_NEGATIVE_COEF,
+                f"{r.name} subscript {s.a}*i{s.s}+({s.b}) has a negative "
+                f"coefficient ({where})"))
+            return
+        if s.a == 0:
+            reasons.append(FallbackReason(
+                R_ZERO_COEF, f"{r.name} has a zero-coefficient subscript ({where})"))
+            return
+        if Fraction(s.b).denominator != 1:
+            reasons.append(FallbackReason(
+                R_FRACTIONAL_OFFSET,
+                f"{r.name} has fractional offset {s.b} ({where})"))
+            return
+        if s.s in seen_levels:
+            reasons.append(FallbackReason(
+                R_REPEATED_LEVEL,
+                f"{r.name} subscripts repeat loop level {s.s} ({where})"))
+            return
+        seen_levels.append(s.s)
+        layout.append((s.s, s.a))
+
+    prev = per_array.get(r.name)
+    if prev is None:
+        per_array[r.name] = layout
+        return
+    if [l for l, _ in prev] != [l for l, _ in layout]:
+        reasons.append(FallbackReason(
+            R_INCONSISTENT_LAYOUT,
+            f"{r.name} is referenced with different dim->level layouts ({where})"))
+    elif prev != layout:
+        reasons.append(FallbackReason(
+            R_MIXED_STRIDE,
+            f"{r.name} is referenced with different per-level coefficients "
+            f"({where})"))
+
+
+def probe_pallas(plan: Plan) -> Capability:
+    """Check every structural requirement of the Pallas stencil kernel.
+
+    Requirements (mirrors ``repro.kernels.race_stencil``):
+      * 2-D or 3-D nest;
+      * every lhs covers all loop levels, unit-coefficient, distinct levels;
+      * base-array references: positive integer coefficients, integral
+        offsets, no constant dims, no repeated levels, one consistent
+        (dim -> level, coefficient) layout per array;
+      * auxiliary references: unit coefficient (they index the iteration
+        space directly; detection always produces these, checked anyway).
+    """
+    prog = plan.program
+    m = prog.depth
+    reasons: list = []
+    if not 2 <= m <= 3:
+        reasons.append(FallbackReason(
+            R_DEPTH, f"nest depth {m} outside the kernel's 2-D/3-D scope"))
+
+    aux_names = {a.name for a in plan.aux_order}
+    all_levels = set(range(1, m + 1))
+    per_array: dict = {}
+
+    for st in plan.body:
+        lhs = st.lhs
+        lhs_levels = [s.s for s in lhs.subs]
+        if (set(lhs_levels) != all_levels
+                or len(lhs_levels) != len(set(lhs_levels))
+                or any(s.a != 1 for s in lhs.subs)):
+            reasons.append(FallbackReason(
+                R_LHS_FORM,
+                f"output {lhs.name} must sweep all {m} levels with "
+                f"unit-coefficient distinct subscripts"))
+
+    def probe_expr(e: Expr, where: str) -> None:
+        for r in expr_refs(e):
+            if not r.subs:
+                continue
+            if r.name in aux_names:
+                if any(s.a != 1 for s in r.subs):
+                    reasons.append(FallbackReason(
+                        R_STRIDED_AUX,
+                        f"auxiliary {r.name} referenced with non-unit "
+                        f"coefficient ({where})"))
+                continue
+            _probe_ref(r, per_array, reasons, where)
+
+    for st in plan.body:
+        probe_expr(st.rhs, f"main statement {st.lhs.name}")
+    for aux in plan.aux_order:
+        probe_expr(plan.aux_exprs[aux.name], f"aux {aux.name}")
+
+    # dedupe while keeping first-seen order
+    uniq, seen = [], set()
+    for r in reasons:
+        if (r.code, r.detail) not in seen:
+            seen.add((r.code, r.detail))
+            uniq.append(r)
+    return Capability(eligible=not uniq, reasons=tuple(uniq))
+
+
+def select_backend(plan: Plan, requested: str = "auto") -> Selection:
+    """Resolve ``requested`` against the plan's capability.
+
+    ``"auto"`` prefers Pallas when eligible, else falls back to XLA (the
+    fallback reasons travel in the returned Selection).  ``"pallas"`` raises
+    :class:`BackendUnavailable` on an ineligible plan.
+    """
+    if requested not in BACKENDS:
+        raise ValueError(f"unknown backend {requested!r}; choose from {BACKENDS}")
+    cap = probe_pallas(plan)
+    if requested == "xla":
+        return Selection("xla", requested, cap)
+    if requested == "pallas":
+        if not cap.eligible:
+            raise BackendUnavailable(cap)
+        return Selection("pallas", requested, cap)
+    return Selection("pallas" if cap.eligible else "xla", requested, cap)

@@ -214,6 +214,31 @@ def build_baseline_evaluator(program: Program):
     return run
 
 
+def build_evaluator(plan: Plan, backend: str = "auto", *, block_rows: int = 8,
+                    block_cols: int = 8, interpret: bool = True):
+    """Backend-dispatching evaluator factory for a plan.
+
+    Returns ``(run, selection)``: ``run(env)`` yields interior-convention
+    outputs on the resolved backend; ``selection`` says which backend was
+    chosen and, on an ``auto`` fallback, why Pallas was ineligible.
+    """
+    from .backend import select_backend
+
+    sel = select_backend(plan, backend)
+    if sel.backend == "pallas":
+        from functools import partial as _partial
+
+        from repro.kernels.race_stencil import race_stencil_call
+
+        run = _partial(race_stencil_call, plan, block_rows=block_rows,
+                       block_cols=block_cols, interpret=interpret)
+        return run, sel
+    from repro.kernels.ref import interior
+
+    plan_run = build_plan_evaluator(plan)
+    return (lambda env: interior(plan, plan_run(env))), sel
+
+
 def required_shapes(program: Program) -> dict:
     """Minimal array shapes covering every access (for building test data)."""
     full = program.ranges()

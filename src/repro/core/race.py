@@ -20,6 +20,7 @@ from dataclasses import dataclass, field
 from typing import Optional
 
 from . import analysis
+from .backend import BACKENDS, Capability, Selection, probe_pallas, select_backend
 from .codegen import build_baseline_evaluator, build_plan_evaluator
 from .depgraph import Plan, finalize, materialized_elements
 from .detect import PaperCost, RooflineCost, Transformed, detect_binary
@@ -64,6 +65,34 @@ class RaceResult:
     def baseline_evaluator(self):
         return build_baseline_evaluator(self.program)
 
+    def capability(self) -> Capability:
+        """Pallas-eligibility probe with structured fallback reasons."""
+        return probe_pallas(self.plan)
+
+    def select_backend(self, backend: Optional[str] = None) -> Selection:
+        """Resolve a backend request (default: the one given to ``race``)."""
+        return select_backend(self.plan, backend or self.options.get("backend", "auto"))
+
+    def run(self, env: dict, backend: Optional[str] = None, *,
+            block_rows: int = 8, block_cols: int = 8, interpret: bool = True):
+        """Execute the plan on the selected backend.
+
+        Both backends return the *interior* convention — ``{output name:
+        array over the statement ranges}`` — so results are directly
+        comparable across backends.  ``backend=None`` uses the request
+        recorded by :func:`race` (``"auto"`` prefers Pallas when eligible).
+        """
+        from .codegen import build_evaluator
+
+        fn, sel = build_evaluator(
+            self.plan, backend or self.options.get("backend", "auto"),
+            block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+        if sel.backend == "pallas":
+            import jax
+
+            fn = jax.jit(fn)
+        return fn(env)
+
     # --- pretty ------------------------------------------------------------
     def to_source(self) -> str:
         vn = {l.level: l.var for l in self.program.loops}
@@ -96,8 +125,19 @@ def race(
     rewrite_div: bool = False,
     max_rounds: int = 64,
     mis_exact_limit: int = 40,
+    backend: str = "auto",
 ) -> RaceResult:
-    """Run RACE on a program.  See module docstring for knobs."""
+    """Run RACE on a program.  See module docstring for knobs.
+
+    ``backend`` records the execution-backend request honored by
+    :meth:`RaceResult.run`: ``"xla"`` (whole-array evaluator), ``"pallas"``
+    (blocked TPU kernel; raises ``BackendUnavailable`` at run/selection time
+    when the plan is ineligible), or ``"auto"`` (Pallas when the capability
+    probe passes, XLA otherwise — never silently: the Selection carries the
+    fallback reasons).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
     if reassociate and esr:
         # ESR+ = ESR with reassociation (paper's strongest baseline)
         pass
@@ -130,5 +170,6 @@ def race(
             reassociate=reassociate,
             esr=esr,
             contraction=contraction,
+            backend=backend,
         ),
     )

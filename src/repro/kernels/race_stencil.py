@@ -12,21 +12,31 @@ Kernel structure
     axis 0, innermost level = last axis, which stays full-width for the VPU
     lanes — the paper keeps the innermost dimension uncontracted for
     vectorization for the same reason);
-  * the grid tiles axis 0; each step sees three consecutive input row-blocks
-    (prev/cur/next) via three BlockSpecs of the same operand — block-level
-    halo exchange, the standard Pallas idiom for overlapping windows;
-  * trailing axes carry a compile-time halo pad, so every shifted reference
-    is a static in-bounds slice;
-  * auxiliary values are evaluated in topological order with per-aux row/col
-    extensions derived from their consumers' shifts (reverse-topo pass), so
-    every reuse the detection found is realized as a VMEM hit.
+  * the grid tiles the outer level for 2-D nests and the two outer levels
+    for 3-D nests; each step sees three consecutive input blocks
+    (prev/cur/next) per blocked level via 3 (or 3x3) BlockSpecs of the same
+    operand — block-level halo exchange, the standard Pallas idiom for
+    overlapping windows;
+  * unblocked trailing axes carry a compile-time halo pad, so every shifted
+    reference is a static in-bounds slice;
+  * affine references ``A[a*i + b]`` with positive integer coefficients are
+    supported: each base array keeps one coefficient per level (probed by
+    ``repro.core.backend``), its input windows are laid out in *input*
+    coordinates (block size ``a * tile``), and every read lowers to a static
+    strided slice — this covers the paper's rprj3-class stride-2 restriction
+    kernels;
+  * auxiliary arrays index the iteration space directly (unit coefficient),
+    and are evaluated in topological order with per-aux tile extensions
+    derived from their consumers' shifts (reverse-topo pass), so every reuse
+    the detection found is realized as a VMEM hit.
 
-Supported programs: unit-coefficient affine references (stride-1 stencils),
-2-D/3-D nests, any number of outputs/statements, scalars and constants; the
-strided rprj3-style kernels stay on the XLA evaluator path.
+Programs outside this shape (negative/zero coefficients, repeated levels,
+constant dims, 1-D or >3-D nests) stay on the XLA evaluator path; the
+capability probe in ``repro.core.backend`` reports the precise reason.
 """
 from __future__ import annotations
 
+import itertools
 from fractions import Fraction
 from functools import partial
 
@@ -48,21 +58,33 @@ _FUNCS = {"sin": jnp.sin, "cos": jnp.cos, "exp": jnp.exp, "log": jnp.log,
 # ---------------------------------------------------------------------------
 
 
-def _ref_shift(ref: Ref):
-    """{level: integer shift} of a unit-coefficient reference (arrays may
-    cover a subset of the nest levels, e.g. 2-D map factors in a 3-D nest)."""
-    sh = {}
+def _ref_affine(ref: Ref):
+    """{level: (a, b)} of an affine reference with positive integer
+    coefficients (arrays may cover a subset of the nest levels, e.g. 2-D map
+    factors in a 3-D nest)."""
+    info = {}
     for s in ref.subs:
         if s.s == 0:
             raise ValueError("constant dims unsupported in the Pallas path")
-        if s.a != 1:
-            raise ValueError("strided references stay on the XLA path")
-        sh[s.s] = int(Fraction(s.b))
+        if s.a <= 0:
+            raise ValueError("non-positive coefficients stay on the XLA path")
+        if s.s in info:
+            raise ValueError("repeated levels stay on the XLA path")
+        b = Fraction(s.b)
+        if b.denominator != 1:
+            raise ValueError("fractional offsets stay on the XLA path")
+        info[s.s] = (s.a, int(b))
+    return info
+
+
+def _ref_shift(ref: Ref):
+    """{level: integer shift} of a unit-coefficient reference."""
+    sh = {}
+    for lvl, (a, b) in _ref_affine(ref).items():
+        if a != 1:
+            raise ValueError("strided aux references unsupported")
+        sh[lvl] = b
     return sh
-
-
-def _ref_levels(ref: Ref):
-    return tuple(sorted(s.s for s in ref.subs))
 
 
 def _level_perm(ref: Ref):
@@ -72,10 +94,16 @@ def _level_perm(ref: Ref):
 
 
 def plan_geometry(plan: Plan):
-    """Compute per-level halo radii and per-aux extensions.
+    """Compute per-aux tile extensions and per-array input geometry.
 
-    Returns (pad: per-level input halo, ext: {aux: per-level extension},
-    base_perms: {array: dim->level permutation}, out_names)."""
+    Returns ``(ext, perms, levels_of, coefs, pad_in)``:
+      * ext: {aux: per-level tile extension, output coords};
+      * perms: {array: dim -> ascending-level permutation};
+      * levels_of: {array: covered levels, ascending};
+      * coefs: {array: {level: coefficient a}} (consistent per array/level);
+      * pad_in: {array: per-level halo in *input* coordinates}
+        (``a * extension + |b|`` maximized over every reference).
+    """
     prog = plan.program
     m = prog.depth
     aux_names = {a.name for a in plan.aux_order}
@@ -94,27 +122,42 @@ def plan_geometry(plan: Plan):
     for a in reversed(plan.aux_order):
         visit_consumer(plan.aux_exprs[a.name], ext[a.name])
 
-    # total input halo: walk every base ref in every expr with the owning
+    # per-array geometry: walk every base ref in every expr with the owning
     # context's extension
-    pad = [0] * m
-    perms = {}
-    levels_of = {}
+    perms: dict = {}
+    levels_of: dict = {}
+    dim_levels: dict = {}
+    coefs: dict = {}
+    pad_in: dict = {}
 
     def visit_base(expr: Expr, own_ext):
         for r in _walk_refs(expr):
             if r.name in aux_names or not r.subs:
                 continue
-            sh = _ref_shift(r)
+            info = _ref_affine(r)
+            lvls = tuple(sorted(info))
+            if levels_of.setdefault(r.name, lvls) != lvls:
+                raise ValueError(
+                    f"{r.name}: inconsistent level sets across references")
+            dims = tuple(s.s for s in r.subs)
+            if dim_levels.setdefault(r.name, dims) != dims:
+                raise ValueError(
+                    f"{r.name}: inconsistent dim->level layout across references")
             perms.setdefault(r.name, _level_perm(r))
-            levels_of.setdefault(r.name, _ref_levels(r))
-            for lvl, d in sh.items():
-                pad[lvl - 1] = max(pad[lvl - 1], abs(d) + own_ext[lvl - 1])
+            cur = coefs.setdefault(r.name, {l: a for l, (a, _) in info.items()})
+            if any(cur[l] != a for l, (a, _) in info.items()):
+                raise ValueError(
+                    f"{r.name}: mixed per-level coefficients across references")
+            p = pad_in.setdefault(r.name, [0] * m)
+            for lvl, (a, b) in info.items():
+                p[lvl - 1] = max(p[lvl - 1], a * own_ext[lvl - 1] + abs(b))
 
     for st in plan.body:
         visit_base(st.rhs, [0] * m)
     for a in plan.aux_order:
         visit_base(plan.aux_exprs[a.name], ext[a.name])
-    return tuple(pad), {k: tuple(v) for k, v in ext.items()}, perms, levels_of
+    return ({k: tuple(v) for k, v in ext.items()}, perms, levels_of, coefs,
+            {k: tuple(v) for k, v in pad_in.items()})
 
 
 def _walk_refs(e: Expr):
@@ -128,31 +171,40 @@ def _walk_refs(e: Expr):
 # ---------------------------------------------------------------------------
 
 
-def _build_kernel(plan: Plan, pad, ext, scalar_names, base_names, out_names,
-                  bh: int, extents, levels_of):
+def _build_kernel(plan: Plan, ext, scalar_names, base_names, out_names,
+                  blocks, extents, levels_of, coefs, pad_in):
     """Returns kernel(scalars, windows..., outs...) for pl.pallas_call.
     Arrays covering a level subset broadcast via size-1 axes at the levels
-    they lack."""
+    they lack.  ``blocks`` maps grid-tiled levels to their tile size."""
     prog = plan.program
     m = prog.depth
     aux_names = [a.name for a in plan.aux_order]
     aux_levels = {a.name: a.levels for a in plan.aux_order}
-    trailing_out = tuple(extents[1:])  # output trailing extents
+    out_tile = tuple(blocks.get(l, extents[l - 1]) for l in range(1, m + 1))
 
-    def _out_width(lvl, re):  # tile width along a level (1-based)
-        return (bh if lvl == 1 else trailing_out[lvl - 2]) + 2 * re[lvl - 1]
+    def _tile_width(lvl, re):  # tile width along a level (1-based)
+        return out_tile[lvl - 1] + 2 * re[lvl - 1]
 
     def kernel(*refs):
         it = iter(refs)
         scal = next(it)  # (1, n_scalars)
         windows = {}
         for nm in base_names:
-            if 1 in levels_of[nm]:
-                prev, cur, nxt = next(it), next(it), next(it)
-                windows[nm] = jnp.concatenate(
-                    [prev[...], cur[...], nxt[...]], axis=0)
-            else:  # row-invariant array: one full operand
-                windows[nm] = next(it)[...]
+            covered = levels_of[nm]
+            blk = [l for l in covered if l in blocks]
+            parts = {}
+            for ds in itertools.product((0, 1, 2), repeat=len(blk)):
+                parts[ds] = next(it)[...]
+
+            def assemble(prefix, rem):
+                if not rem:
+                    return parts[prefix]
+                ax = covered.index(rem[0])
+                return jnp.concatenate(
+                    [assemble(prefix + (d,), rem[1:]) for d in (0, 1, 2)],
+                    axis=ax)
+
+            windows[nm] = assemble((), tuple(blk))
         outs = [next(it) for _ in out_names]
 
         env_scalar = {nm: scal[0, i] for i, nm in enumerate(scalar_names)}
@@ -166,30 +218,31 @@ def _build_kernel(plan: Plan, pad, ext, scalar_names, base_names, out_names,
             if isinstance(e, Ref):
                 if not e.subs:
                     return env_scalar[e.name]
-                sh = _ref_shift(e)
                 if e.name in aux_vals:
+                    sh = _ref_shift(e)
                     val, store_ext, covered = aux_vals[e.name]
                     sl = []
                     for lvl in range(1, m + 1):
                         if lvl in covered:
                             s0 = store_ext[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
-                            sl.append(slice(s0, s0 + _out_width(lvl, re)))
+                            sl.append(slice(s0, s0 + _tile_width(lvl, re)))
                         else:
                             sl.append(slice(0, 1))
                     return val[tuple(sl)]
+                info = _ref_affine(e)
                 w = windows[e.name]
                 covered = levels_of[e.name]
                 sl = []
-                for lvl in range(1, m + 1):
-                    if lvl not in covered:
-                        continue
-                    if lvl == 1:
-                        # window rows [i*bh, (i+3)*bh): output row rr at
-                        # shift s -> window row bh + rr + s
-                        s0 = bh + sh.get(1, 0) - re[0]
+                for lvl in covered:
+                    a, b = info[lvl]
+                    width = _tile_width(lvl, re)
+                    if lvl in blocks:
+                        # window = 3 input blocks of a*tile; "cur" starts at
+                        # a*tile; output pos r at shift b -> a*r + b + a*tile
+                        s0 = a * blocks[lvl] + b - a * re[lvl - 1]
                     else:
-                        s0 = pad[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
-                    sl.append(slice(s0, s0 + _out_width(lvl, re)))
+                        s0 = pad_in[e.name][lvl - 1] + b - a * re[lvl - 1]
+                    sl.append(slice(s0, s0 + a * (width - 1) + 1, a))
                 v = w[tuple(sl)]
                 # insert size-1 axes at missing levels
                 shape = []
@@ -219,16 +272,22 @@ def _build_kernel(plan: Plan, pad, ext, scalar_names, base_names, out_names,
 
         for ref, st in zip(outs, plan.body):
             val = ev(st.rhs, (0,) * m)
-            full = (bh,) + trailing_out
-            ref[...] = jnp.broadcast_to(val, full).astype(ref.dtype)
+            ref[...] = jnp.broadcast_to(val, out_tile).astype(ref.dtype)
 
     return kernel
 
 
+# ---------------------------------------------------------------------------
+# host-side call
+# ---------------------------------------------------------------------------
+
+
 def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
-                      interpret: bool = True):
+                      block_cols: int = 8, interpret: bool = True):
     """Execute the plan's main statements with a blocked Pallas kernel.
 
+    The grid tiles level 1 by ``block_rows``; 3-D nests additionally tile
+    level 2 by ``block_cols`` (the innermost level always stays full-width).
     env maps base array names -> arrays (laid out as in the program) and
     scalar names -> scalars.  Returns {output name: interior array} shaped by
     the statement ranges (level-major layout transposed back to each output's
@@ -238,65 +297,90 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
     ranges = prog.ranges()
     extents = [ranges[l][1] - ranges[l][0] + 1 for l in range(1, m + 1)]
     lo = [ranges[l][0] for l in range(1, m + 1)]
-    pad, ext, perms, levels_of = plan_geometry(plan)
-    if pad[0] > block_rows:
-        raise ValueError("row halo exceeds block size; raise block_rows")
+    ext, perms, levels_of, coefs, pad_in = plan_geometry(plan)
+
+    blocks = {1: block_rows}
+    if m >= 3:
+        blocks[2] = block_cols
+    grid_levels = sorted(blocks)
+    nb = {l: -(-extents[l - 1] // blocks[l]) for l in grid_levels}
+    grid = tuple(nb[l] for l in grid_levels)
+    grid_pos = {l: gi for gi, l in enumerate(grid_levels)}
+
+    for nm, p in pad_in.items():
+        for l in grid_levels:
+            if l in levels_of[nm] and p[l - 1] > coefs[nm][l] * blocks[l]:
+                knob = "block_rows" if l == 1 else "block_cols"
+                raise ValueError(
+                    f"{nm}: level-{l} halo {p[l - 1]} exceeds the input block "
+                    f"size {coefs[nm][l] * blocks[l]}; raise {knob}")
 
     scalar_names = sorted(nm for nm, v in env.items() if np.ndim(v) == 0)
     base_names = sorted(perms)
     out_names = [st.lhs.name for st in plan.body]
-
-    bh = block_rows
-    n_blocks = -(-extents[0] // bh)
     dt = jnp.result_type(*[env[nm] for nm in base_names])
 
-    # ---- prepare inputs: level-major layout + halo pad + row alignment ----
+    # ---- prepare inputs: level-major layout + halo pad + block alignment --
     scal = jnp.array([[env[nm] for nm in scalar_names]], dtype=dt) \
         if scalar_names else jnp.zeros((1, 1), dt)
     ins = [scal]
-    in_specs = [pl.BlockSpec((1, max(len(scalar_names), 1)), lambda i: (0, 0))]
-    trailing = tuple(extents[1:])
+    in_specs = [pl.BlockSpec((1, max(len(scalar_names), 1)),
+                             lambda *pids: (0, 0))]
+
+    def _imap(covered, ds_map):
+        # block-index map: blocked axes follow the grid id plus their halo
+        # offset d in {0,1,2}; unblocked axes are one full-width block
+        def imap(*pids):
+            return tuple(
+                pids[grid_pos[l]] + ds_map[l] if l in ds_map else 0
+                for l in covered)
+        return imap
+
     for nm in base_names:
         arr = jnp.asarray(env[nm])
         arr = jnp.transpose(arr, np.argsort(perms[nm])) \
             if perms[nm] != tuple(range(arr.ndim)) else arr
-        lvls = levels_of[nm]
-        # zero-pad by the (aux-accumulated) halo first — the halo may exceed
-        # the array's own margin; cells fabricated from the zero pad only
-        # reach never-consumed aux corners — then slice the touched region
-        arr = jnp.pad(arr, [(pad[l - 1], pad[l - 1]) for l in lvls])
-        sl = [slice(lo[l - 1], lo[l - 1] + extents[l - 1] + 2 * pad[l - 1])
-              for l in lvls]
-        arr = arr[tuple(sl)]
-        nd = arr.ndim
-        if 1 in lvls:  # row-blocked with a 3-block halo window
-            rows_needed = (n_blocks + 2) * bh
-            pre = bh - pad[0]
-            post = rows_needed - arr.shape[0] - pre
-            arr = jnp.pad(arr, [(pre, post)] + [(0, 0)] * (nd - 1))
-            block = (bh,) + tuple(arr.shape[1:])
-            for d in (0, 1, 2):
-                ins.append(arr)
-                in_specs.append(pl.BlockSpec(
-                    block,
-                    partial(lambda i, d, nd: (i + d,) + (0,) * (nd - 1),
-                            d=d, nd=nd)))
-        else:  # row-invariant: single full operand
+        covered = levels_of[nm]
+        # per-axis (input coords): window start/length; zero-pad so every
+        # slice is in bounds — cells fabricated from the zero pad only reach
+        # never-consumed aux corners
+        pads, sls, block_shape = [], [], []
+        for ax, l in enumerate(covered):
+            a = coefs[nm][l]
+            p = pad_in[nm][l - 1]
+            if l in blocks:
+                abl = a * blocks[l]
+                start = a * lo[l - 1] - abl  # one full "prev" halo block
+                length = (nb[l] + 2) * abl
+                block_shape.append(abl)
+            else:
+                start = a * lo[l - 1] - p
+                length = a * (extents[l - 1] - 1) + 2 * p + 1
+                block_shape.append(length)
+            left = max(0, -start)
+            right = max(0, start + length - arr.shape[ax])
+            pads.append((left, right))
+            sls.append(slice(start + left, start + left + length))
+        arr = jnp.pad(arr, pads)[tuple(sls)]
+        blk = [l for l in covered if l in blocks]
+        for ds in itertools.product((0, 1, 2), repeat=len(blk)):
             ins.append(arr)
-            in_specs.append(pl.BlockSpec(
-                tuple(arr.shape), lambda i, _nd=nd: (0,) * _nd))
+            in_specs.append(pl.BlockSpec(tuple(block_shape),
+                                         _imap(covered, dict(zip(blk, ds)))))
 
-    out_shape = [jax.ShapeDtypeStruct((n_blocks * bh,) + trailing, dt)
-                 for _ in out_names]
-    out_specs = [pl.BlockSpec((bh,) + trailing,
-                              lambda i: (i,) + (0,) * (m - 1))
-                 for _ in out_names]
+    out_tile = tuple(blocks.get(l, extents[l - 1]) for l in range(1, m + 1))
+    out_padded = tuple(nb[l] * blocks[l] if l in blocks else extents[l - 1]
+                       for l in range(1, m + 1))
+    out_shape = [jax.ShapeDtypeStruct(out_padded, dt) for _ in out_names]
+    out_specs = [pl.BlockSpec(out_tile, _imap(tuple(range(1, m + 1)), {
+        l: 0 for l in grid_levels}))
+        for _ in out_names]
 
-    kernel = _build_kernel(plan, pad, ext, scalar_names, base_names,
-                           out_names, bh, extents, levels_of)
+    kernel = _build_kernel(plan, ext, scalar_names, base_names, out_names,
+                           blocks, extents, levels_of, coefs, pad_in)
     outs = pl.pallas_call(
         kernel,
-        grid=(n_blocks,),
+        grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
@@ -305,7 +389,7 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
 
     result = {}
     for nm, arr in zip(out_names, outs):
-        arr = arr[: extents[0]]
+        arr = arr[tuple(slice(0, e) for e in extents)]
         # transpose back from level-major to the output's own dim order:
         # output dim d carries level lhs.subs[d].s -> take level-major axis s-1
         lhs = next(st.lhs for st in plan.body if st.lhs.name == nm)

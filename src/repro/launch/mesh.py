@@ -9,19 +9,26 @@ from __future__ import annotations
 import jax
 
 
+def _axis_type_kwargs(n_axes: int) -> dict:
+    """``axis_types`` only where the pinned jax has it (added after 0.4.x);
+    older versions default every axis to Auto anyway."""
+    if hasattr(jax.sharding, "AxisType"):
+        return dict(axis_types=(jax.sharding.AxisType.Auto,) * n_axes)
+    return {}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips with a leading 'pod'
     axis (extra data parallelism across the inter-pod DCN/ICI links)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_type_kwargs(len(axes)))
 
 
 def make_mesh(shape, axes):
     """Arbitrary mesh for tests / small runs (e.g. (2, 2) on 4 host devices)."""
     return jax.make_mesh(tuple(shape), tuple(axes),
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+                         **_axis_type_kwargs(len(axes)))
 
 
 # v5e hardware constants used by the roofline analysis (per chip)

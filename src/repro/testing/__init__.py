@@ -1,0 +1,9 @@
+"""Differential-verification harness for the RACE execution backends."""
+from .differential import (CaseReport, ComboResult, build_env,
+                           coverage_matrix, default_tolerances, run_case,
+                           sweep_registry)
+
+__all__ = [
+    "CaseReport", "ComboResult", "build_env", "coverage_matrix",
+    "default_tolerances", "run_case", "sweep_registry",
+]

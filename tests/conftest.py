@@ -1,0 +1,31 @@
+"""Shared pytest config: tier markers and the fast tier-1 selection.
+
+Tier-1 (the default ``python -m pytest -x -q``) runs everything except
+tests marked ``slow``; pass ``--runslow`` for the full-size sweeps.  The
+``pallas`` marker tags tests exercising the Pallas kernel (interpret mode on
+this container), so ``-m pallas`` selects the kernel surface alone.
+"""
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="also run tests marked slow (full-size differential sweeps)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: heavy sweeps excluded from the fast tier-1 run "
+                   "(enable with --runslow)")
+    config.addinivalue_line(
+        "markers", "pallas: exercises the Pallas RACE-stencil kernel")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--runslow"):
+        return
+    skip_slow = pytest.mark.skip(reason="slow tier; use --runslow")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip_slow)

@@ -1,0 +1,143 @@
+"""Unified backend layer: full-registry differential verification plus the
+capability-probe contract.
+
+Every case in ``repro.apps.paper_kernels`` runs baseline vs RACE-XLA vs
+RACE-Pallas (where the probe passes) and must agree within per-dtype
+tolerances; ineligible plans must carry structured fallback reasons rather
+than raise or silently degrade.
+"""
+import numpy as np
+import pytest
+
+from repro.apps.paper_kernels import CASES, Case, get_case
+from repro.core.backend import (R_NEGATIVE_COEF, R_REPEATED_LEVEL,
+                                BackendUnavailable, probe_pallas,
+                                select_backend)
+from repro.core.ir import arr, loopnest, program
+from repro.core.race import race
+from repro.kernels.ref import reference
+from repro.testing import build_env, coverage_matrix, run_case, sweep_registry
+from repro.testing.differential import SWEEP_SIZES
+
+pytestmark = pytest.mark.pallas
+
+
+# ---------------------------------------------------------------------------
+# registry-wide differential sweep (tier-1: binary + the case's paper level)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_registry_differential(name):
+    case = get_case(name, SWEEP_SIZES.get(name))
+    levels = sorted({0, case.reassociate})
+    report = run_case(case, reassociate_levels=levels)
+    assert not report.failures(), coverage_matrix([report])
+    # the whole registry now lowers to Pallas — a regression back to the
+    # XLA fallback (even a "reasoned" one) would silently void the claim
+    assert report.pallas_covered(), coverage_matrix([report])
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_registry_differential_full(dtype):
+    """All reassociation levels {0, 3, 4} x both backends x all cases."""
+    reports = sweep_registry(dtype=dtype)
+    fails = [f for r in reports for f in r.failures()]
+    assert not fails, coverage_matrix(reports)
+    assert all(r.pallas_covered() for r in reports), coverage_matrix(reports)
+
+
+def test_strided_rprj3_takes_pallas_path():
+    """Acceptance: the stride-2 restriction kernel must not fall back."""
+    case = get_case("rprj3", 12)
+    res = race(case.program, reassociate=case.reassociate, backend="pallas")
+    sel = res.select_backend()
+    assert sel.backend == "pallas" and not sel.fell_back
+    env = build_env(case, np.float32)
+    got = res.run(env)
+    want = reference(res.plan, env)  # baseline evaluator, interior
+    for k in want:
+        g = np.asarray(got[k], np.float64)
+        w = np.asarray(want[k], np.float64)
+        rel = np.abs(g - w).max() / np.abs(w).max()
+        assert rel <= 1e-5, f"{k}: rel err {rel:.3e}"
+
+
+def test_strided_2d_synthetic():
+    """Mixed per-level strides in a 2-D nest (a=2 and a=3), Pallas vs XLA."""
+    loops, (i, j) = loopnest(("i", 1, 9), ("j", 1, 7))
+    v, out = arr("v"), arr("st2")
+    body = (v[2 * i + 1, 3 * j] + v[2 * i - 1, 3 * j]) + v[2 * i + 1, 3 * j - 2]
+    prog = program(loops, [(out[i, j], body)])
+    case = Case("strided2d", "synthetic", prog, reassociate=3)
+    report = run_case(case, reassociate_levels=(0, 3))
+    assert not report.failures(), coverage_matrix([report])
+    assert report.pallas_covered()
+
+
+# ---------------------------------------------------------------------------
+# capability probe: structured fallback reasons, never an exception
+# ---------------------------------------------------------------------------
+
+
+def _negative_coef_case():
+    loops, (i, j) = loopnest(("i", 1, 6), ("j", 1, 6))
+    u, out = arr("u"), arr("neg_out")
+    prog = program(loops, [(out[i, j], u[-i + 8, j] + u[i, j])])
+    return Case("negcoef", "synthetic", prog, reassociate=0)
+
+
+def _repeated_level_case():
+    loops, (i, j) = loopnest(("i", 1, 6), ("j", 1, 6))
+    u, out = arr("u"), arr("rep_out")
+    prog = program(loops, [(out[i, j], u[i, i] + u[i, j])])
+    return Case("replevel", "synthetic", prog, reassociate=0)
+
+
+@pytest.mark.parametrize("builder,code", [
+    (_negative_coef_case, R_NEGATIVE_COEF),
+    (_repeated_level_case, R_REPEATED_LEVEL),
+])
+def test_probe_reports_structured_fallback(builder, code):
+    case = builder()
+    res = race(case.program)
+    cap = probe_pallas(res.plan)  # must not raise
+    assert not cap.eligible
+    assert code in {r.code for r in cap.reasons}
+    assert all(r.detail for r in cap.reasons)
+
+    # auto selection falls back to XLA, carrying the reasons
+    sel = res.select_backend("auto")
+    assert sel.backend == "xla" and sel.fell_back
+    assert code in {r.code for r in sel.capability.reasons}
+
+    # the XLA gather path still executes the program correctly
+    env = build_env(case, np.float32)
+    got = res.run(env, "auto")
+    want = reference(res.plan, env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+    # an explicit pallas demand raises the structured error
+    with pytest.raises(BackendUnavailable) as exc:
+        select_backend(res.plan, "pallas")
+    assert code in {r.code for r in exc.value.capability.reasons}
+
+
+def test_differential_harness_flags_ineligible_as_explicit_fallback():
+    report = run_case(_negative_coef_case(), reassociate_levels=(0,))
+    assert not report.failures()  # fallback with a reason is not a failure
+    pallas = [c for c in report.combos if c.backend == "pallas"]
+    assert pallas and all(c.explicit_fallback for c in pallas)
+    assert R_NEGATIVE_COEF in pallas[0].reason
+
+
+def test_unknown_backend_rejected():
+    case = get_case("hdifft_gm", 10)
+    with pytest.raises(ValueError, match="unknown backend"):
+        race(case.program, backend="tpu")
+    res = race(case.program)
+    with pytest.raises(ValueError, match="unknown backend"):
+        res.select_backend("cuda")

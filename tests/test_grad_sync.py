@@ -9,6 +9,9 @@ SRC = Path(__file__).resolve().parents[1] / "src"
 
 SCRIPT = r"""
 import os
+# pin the CPU platform: the stripped subprocess env would otherwise let jax
+# probe for a TPU runtime (minutes of metadata-server retries off-TPU)
+os.environ["JAX_PLATFORMS"] = "cpu"
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np
 import jax, jax.numpy as jnp
@@ -16,8 +19,10 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 from repro.runtime.grad_sync import compressed_pmean_tree
 
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+# axis_types only exists on newer jax; older versions default to Auto
+mesh_kw = ({"axis_types": (jax.sharding.AxisType.Auto,)}
+           if hasattr(jax.sharding, "AxisType") else {})
+mesh = jax.make_mesh((8,), ("data",), **mesh_kw)
 rng = np.random.default_rng(0)
 # per-shard local gradients (8, 64, 32): axis 0 = DP shard
 g_all = jnp.asarray(rng.standard_normal((8, 64, 32)), jnp.float32)

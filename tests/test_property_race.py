@@ -11,6 +11,10 @@ from itertools import combinations
 
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (see requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 import jax
