@@ -1,0 +1,61 @@
+"""Frontend-captured entry path: capture overhead + plan equivalence.
+
+For each twinned registry case (``repro.apps.frontend_kernels``) this
+section captures the plain-Python twin, checks the captured program and its
+RACE plan are identical to the hand-built DSL path, and reports the capture
+cost — so the trajectory JSONs track the new entry path alongside the
+curated one.  Emits::
+
+    frontend.<case>,<capture_us>,program_equal=1;plan_equal=1;reduced_ops=...
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.apps.frontend_kernels import TWINS
+from repro.apps.paper_kernels import get_case
+from repro.core.codegen import required_shapes
+from repro.core.race import race
+from repro.frontend import capture
+from repro.testing.differential import SWEEP_SIZES
+
+from .common import csv_line
+
+
+def run(cases=None, print_fn=print, repeats: int = 5):
+    rows = []
+    for name in cases or sorted(TWINS):
+        case = get_case(name, SWEEP_SIZES.get(name))
+        shapes = required_shapes(case.program)
+        ts = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            prog = capture(TWINS[name], shapes)
+            ts.append(time.perf_counter() - t0)
+        capture_us = float(np.median(ts)) * 1e6
+
+        program_equal = prog == case.program
+        rh = race(case.program, reassociate=case.reassociate,
+                  rewrite_div=case.rewrite_div)
+        rf = race(prog, reassociate=case.reassociate,
+                  rewrite_div=case.rewrite_div)
+        plan_equal = (rf.to_source() == rh.to_source()
+                      and rf.reduced_ops() == rh.reduced_ops())
+        derived = (f"program_equal={int(program_equal)};"
+                   f"plan_equal={int(plan_equal)};"
+                   f"reduced_ops={rf.reduced_ops():.3f};"
+                   f"n_aux={rf.n_aux()}")
+        print_fn(csv_line(f"frontend.{name}", capture_us, derived))
+        rows.append(dict(name=name, capture_us=capture_us,
+                         program_equal=program_equal, plan_equal=plan_equal))
+    bad = [r["name"] for r in rows
+           if not (r["program_equal"] and r["plan_equal"])]
+    if bad:
+        raise RuntimeError(f"frontend/DSL divergence on: {bad}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -28,6 +28,11 @@ def main() -> None:
                     help="run the pallas backend compiled (interpret=False); "
                          "requires a TPU runtime — interpret-mode timings on "
                          "CPU are correctness signal only")
+    ap.add_argument("--from-frontend", action="store_true",
+                    help="add the 'frontend' section: capture the "
+                         "plain-Python twins (repro.frontend), report "
+                         "capture overhead and plan equivalence vs the "
+                         "hand-built DSL path")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -42,6 +47,10 @@ def main() -> None:
         ("scaling", lambda: scaling.run()),
         ("memory", lambda: memory.run()),
     ]
+    if args.from_frontend:
+        from . import frontend
+
+        sections.append(("frontend", lambda: frontend.run()))
     try:
         from . import roofline
 

@@ -15,7 +15,7 @@ import itertools
 from collections import Counter
 from dataclasses import dataclass, field
 from fractions import Fraction
-from typing import Iterable, Mapping, Sequence, Union
+from typing import Iterable, Mapping, Optional, Sequence, Union
 
 # ---------------------------------------------------------------------------
 # Leaves and nodes
@@ -102,6 +102,22 @@ def is_leaf(e: Expr) -> bool:
 
 
 @dataclass(frozen=True)
+class SourceLoc:
+    """Where a construct came from in user source (frontend capture).
+
+    Excluded from equality/hashing everywhere it is attached: two programs
+    are the same program regardless of which file they were written in.
+    """
+
+    file: str
+    line: int
+    col: int = 0
+
+    def __str__(self) -> str:
+        return f"{self.file}:{self.line}:{self.col}"
+
+
+@dataclass(frozen=True)
 class Loop:
     """One loop ``for var in [lo, hi]`` (inclusive), unit stride."""
 
@@ -122,6 +138,7 @@ class Stmt:
 
     lhs: Ref
     rhs: Expr
+    loc: Optional[SourceLoc] = field(default=None, compare=False, repr=False)
 
 
 @dataclass(frozen=True)
@@ -130,6 +147,7 @@ class Program:
 
     loops: tuple
     body: tuple
+    loc: Optional[SourceLoc] = field(default=None, compare=False, repr=False)
 
     @property
     def depth(self) -> int:

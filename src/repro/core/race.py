@@ -173,3 +173,22 @@ def race(
             backend=backend,
         ),
     )
+
+
+def race_from_fn(fn, shapes, consts=None, **race_opts) -> RaceResult:
+    """Run RACE on a plain-Python loop nest (the capture frontend).
+
+    ``fn`` is an ordinary function written as nested ``for`` loops over
+    NumPy-style arrays (or an ``@race_kernel``-wrapped one); ``shapes`` maps
+    each parameter to ``()`` (scalar) or an array shape; ``consts`` supplies
+    capture-time values for free names.  Remaining keywords go to
+    :func:`race`.  Raises ``repro.frontend.CaptureError`` with a structured
+    diagnostic when ``fn`` is outside the capturable scope.
+
+        res = race_from_fn(blur, {"u": (64, 64), "out": (64, 64)},
+                           reassociate=3)
+        out = res.run({"u": u})
+    """
+    from repro.frontend import capture
+
+    return race(capture(fn, shapes, consts), **race_opts)

@@ -195,12 +195,27 @@ def _run_case_impl(case, reassociate_levels, backends, dtype, seed,
 
 
 def sweep_registry(names: Optional[Iterable[str]] = None,
-                   sizes: Optional[dict] = None, **kw) -> list:
-    """Run :func:`run_case` over (a subset of) the paper-kernel registry."""
+                   sizes: Optional[dict] = None, via: str = "dsl",
+                   **kw) -> list:
+    """Run :func:`run_case` over (a subset of) the paper-kernel registry.
+
+    ``via="frontend"`` swaps every case's program for the one captured from
+    its plain-Python twin (``repro.apps.frontend_kernels``) — capture
+    equality is checked en route, so the sweep then differentially verifies
+    the frontend entry path end to end.  With ``names=None`` the frontend
+    sweep covers the twinned subset rather than erroring on cases without a
+    twin yet.
+    """
     sizes = {**SWEEP_SIZES, **(sizes or {})}
+    if names is None:
+        names = list(CASES)
+        if via == "frontend":
+            from repro.apps.frontend_kernels import TWINS
+
+            names = [n for n in names if n in TWINS]
     reports = []
-    for name in (names or list(CASES)):
-        case = get_case(name, sizes.get(name))
+    for name in names:
+        case = get_case(name, sizes.get(name), via=via)
         reports.append(run_case(case, **kw))
     return reports
 

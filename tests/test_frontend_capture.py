@@ -1,0 +1,231 @@
+"""Frontend capture: plain-Python loop nests become RACE IR.
+
+Acceptance (ISSUE 2): ``capture()`` reproduces the hand-built ``Program``
+— identical plan and ``reduced_ops`` — for the twinned registry cases, and
+the captured path flows through the differential harness and the backend
+layer like any curated program.
+"""
+import numpy as np
+import pytest
+
+from repro.apps.frontend_kernels import TWINS, as_frontend
+from repro.apps.paper_kernels import get_case
+from repro.core.codegen import FUNCS, required_shapes
+from repro.core.ir import Node, Ref, SourceLoc
+from repro.core.race import race, race_from_fn
+from repro.frontend import KNOWN_CALLS, RaceKernel, capture, race_kernel
+from repro.testing import build_env, coverage_matrix, run_case, sweep_registry
+from repro.testing.differential import SWEEP_SIZES
+
+# --------------------------------------------------------------------------
+# registry twins: exact reproduction of the curated entry path
+# --------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(TWINS))
+def test_twin_reproduces_handbuilt_program(name):
+    case = get_case(name, SWEEP_SIZES.get(name))
+    fe = as_frontend(case)  # check=True: raises on any divergence
+    assert fe.program == case.program  # same loops, same expression trees
+
+    rh = race(case.program, reassociate=case.reassociate,
+              rewrite_div=case.rewrite_div)
+    rf = race(fe.program, reassociate=case.reassociate,
+              rewrite_div=case.rewrite_div)
+    assert rf.to_source() == rh.to_source()  # identical plan
+    assert rf.reduced_ops() == rh.reduced_ops()
+    assert rf.n_aux() == rh.n_aux()
+
+
+def test_captured_programs_carry_source_locations():
+    case = get_case("psinv", 10)
+    fe = as_frontend(case)
+    assert isinstance(fe.program.loc, SourceLoc)
+    assert fe.program.loc.file.endswith("frontend_kernels.py")
+    for st in fe.program.body:
+        assert isinstance(st.loc, SourceLoc)
+        assert st.loc.line > fe.program.loc.line
+    # metadata is advisory: it never participates in program equality
+    assert fe.program == case.program and case.program.loc is None
+
+
+@pytest.mark.parametrize("name", ["calc_tpoints", "j3d27pt"])
+def test_frontend_case_through_differential_harness(name):
+    case = get_case(name, SWEEP_SIZES.get(name), via="frontend")
+    report = run_case(case, reassociate_levels=(case.reassociate,))
+    assert not report.failures(), coverage_matrix([report])
+    assert report.pallas_covered(), coverage_matrix([report])
+
+
+def test_sweep_registry_via_frontend_selects_twinned_subset():
+    reports = sweep_registry(via="frontend", names=["hdifft_gm"],
+                             reassociate_levels=(0,))
+    assert [r.case for r in reports] == ["hdifft_gm"]
+    assert not [f for r in reports for f in r.failures()]
+
+
+def test_get_case_rejects_unknown_via_and_missing_twin():
+    with pytest.raises(ValueError, match="unknown via"):
+        get_case("psinv", 10, via="tracing")
+    with pytest.raises(KeyError, match="no plain-Python twin"):
+        get_case("derivative", 10, via="frontend")
+
+
+# --------------------------------------------------------------------------
+# the decorator / convenience surface
+# --------------------------------------------------------------------------
+
+
+def _blur(u, out):
+    n, m = u.shape
+    for i in range(1, n - 1):
+        for j in range(1, m - 1):
+            out[i, j] = (u[i - 1, j] + u[i + 1, j]) / 2.0
+
+
+def test_race_from_fn_runs_on_backend_layer():
+    shapes = {"u": (10, 8), "out": (10, 8)}
+    res = race_from_fn(_blur, shapes, reassociate=0)
+    env = {"u": np.random.default_rng(0).uniform(-1, 1, (10, 8))
+           .astype(np.float32), "out": np.zeros((10, 8), np.float32)}
+    got = res.run(env, backend="auto")
+    want = (env["u"][:-2, 1:-1] + env["u"][2:, 1:-1]) / 2
+    np.testing.assert_allclose(np.asarray(got["out"]), want, rtol=1e-6)
+
+
+def test_race_kernel_decorator_caches_and_runs():
+    kern = race_kernel(reassociate=0)(_blur)
+    assert isinstance(kern, RaceKernel)
+    assert kern.__name__ == "_blur"  # functools.update_wrapper applied
+
+    env = {"u": np.random.default_rng(1).uniform(-1, 1, (12, 9))
+           .astype(np.float32), "out": np.zeros((12, 9), np.float32)}
+    got = kern.run(env)
+    want = (env["u"][:-2, 1:-1] + env["u"][2:, 1:-1]) / 2
+    np.testing.assert_allclose(np.asarray(got["out"]), want, rtol=1e-6)
+
+    shapes = {k: np.shape(v) for k, v in env.items()}
+    assert kern.trace(shapes) is kern.trace(shapes)  # cached RaceResult
+    assert kern.capture(shapes) is kern.capture(shapes)
+    assert kern.last_capture_seconds is not None
+    with pytest.raises(ValueError, match="needs inputs"):
+        kern.run({"u": env["u"]})
+
+
+def test_race_kernel_on_registry_twin_matches_dsl_result():
+    case = get_case("calc_tpoints", SWEEP_SIZES["calc_tpoints"])
+    kern = race_kernel(TWINS["calc_tpoints"], reassociate=case.reassociate)
+    env = build_env(case, np.float32)
+    got = kern.run(env, backend="xla")
+    res = race(case.program, reassociate=case.reassociate)
+    want = res.run(env, "xla")
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-6)
+
+
+def test_capture_consts_parameterize_bounds():
+    def roll(u, out, n):
+        for i in range(1, n):
+            out[i] = u[i] + u[i - 1]
+
+    prog = capture(roll, {"u": (16,), "out": (16,)}, consts={"n": 16})
+    assert prog.loops[0].hi == 15
+    prog8 = capture(roll, {"u": (16,), "out": (16,)}, consts={"n": 8})
+    assert prog8.loops[0].hi == 7
+
+
+def test_capture_negative_and_strided_subscripts():
+    def mixed(u, out):
+        n, m = u.shape
+        for i in range(1, 5):
+            for j in range(0, 4):
+                out[i, j] = u[2 * i + 1, j] + u[8 - i, 3 * j]
+
+    prog = capture(mixed, {"u": (12, 12), "out": (12, 12)})
+    (st,) = prog.body
+    a, b = st.rhs.kids
+    assert (a.subs[0].a, a.subs[0].b) == (2, 1)
+    assert (b.subs[0].a, b.subs[0].b) == (-1, 8)
+    assert b.subs[1].a == 3
+    # negative coefficients stay executable via the XLA gather path
+    res = race(prog)
+    env = {"u": np.random.default_rng(2).uniform(-1, 1, (12, 12))
+           .astype(np.float32), "out": np.zeros((12, 12), np.float32)}
+    got = np.asarray(res.run(env, "xla")["out"])
+    want = np.zeros((4, 4), np.float32)
+    for i in range(1, 5):
+        for j in range(0, 4):
+            want[i - 1, j] = env["u"][2 * i + 1, j] + env["u"][8 - i, 3 * j]
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_capture_augmented_assignment_desugars():
+    def accum(u, out):
+        n = len(u)
+        for i in range(1, n - 1):
+            out[i] += u[i + 1] * u[i - 1]
+
+    prog = capture(accum, {"u": (9,), "out": (9,)})
+    (st,) = prog.body
+    assert isinstance(st.rhs, Node) and st.rhs.op == "+"
+    assert st.rhs.kids[0] == st.lhs  # out[i] = out[i] + ...
+
+
+def test_known_calls_mirror_codegen_funcs():
+    assert set(KNOWN_CALLS) == set(FUNCS)
+
+
+def test_run_with_consts_bound_parameter():
+    def roll(u, out, n):
+        for i in range(1, n):
+            out[i] = u[i] + u[i - 1]
+
+    kern = race_kernel(roll, reassociate=0)
+    env = {"u": np.arange(8, dtype=np.float32),
+           "out": np.zeros(8, np.float32)}
+    got = kern.run(env, consts={"n": 8})  # n supplied as a const, not in env
+    np.testing.assert_allclose(np.asarray(got["out"]),
+                               env["u"][1:] + env["u"][:-1])
+
+
+def test_numpy_attribute_calls_resolve_to_known_impls():
+    def f(u, out):
+        n = len(u)
+        for i in range(1, n):
+            out[i] = np.sqrt(u[i])
+
+    prog = capture(f, {"u": (6,), "out": (6,)})
+    assert prog.body[0].rhs.op == "call"
+    assert prog.body[0].rhs.kids[0].name == "sqrt"
+
+
+def test_numpy_scalars_are_capture_time_values():
+    def scaled(u, out, n, w):
+        for i in range(1, n):
+            out[i] = w * u[i] + u[i - np.int64(1)]
+
+    prog = capture(scaled, {"u": (8,), "out": (8,)},
+                   consts={"n": np.int32(8), "w": np.float32(0.5)})
+    assert prog.loops[0].hi == 7
+    (st,) = prog.body
+    coef, _ = st.rhs.kids[0].kids  # w * u[i] folded to Const(0.5)
+    assert coef.val == 0.5
+    assert st.rhs.kids[1].subs[0].b == -1
+
+
+def test_captured_semantics_match_direct_python_execution():
+    """The twin is executable Python: running it directly must agree with
+    the captured program's baseline evaluator (source-vs-IR differential)."""
+    case = get_case("poisson", 8)
+    shapes = required_shapes(case.program)
+    env = build_env(case, np.float64)
+    direct = {k: np.array(v, np.float64) for k, v in env.items()}
+    TWINS["poisson"](direct["u"], direct["fp"], direct["pois"],
+                     float(direct["pc0"]), float(direct["pc1"]),
+                     float(direct["pc2"]))
+    prog = capture(TWINS["poisson"], shapes)
+    got = race(prog).baseline_evaluator()(env)["pois"]
+    # float32 JAX eval vs float64 Python loops
+    np.testing.assert_allclose(np.asarray(got, np.float64), direct["pois"],
+                               rtol=2e-5, atol=2e-6)

@@ -1,0 +1,299 @@
+"""Frontend rejection contract: every out-of-scope input yields a structured
+``FrontendDiagnostic`` with a stable code and the right source line/col —
+never a silent failure.  Mirrors ``test_backend_differential``'s
+fallback-reason assertions for the capability probe.
+
+Each bad kernel marks its offending line with ``# !``; the test asserts the
+diagnostic points at exactly that line of this file.
+"""
+import inspect
+
+import pytest
+
+from repro.frontend import (ALL_CODES, CaptureError, D_CONTROL_FLOW,
+                            D_IMPERFECT_NEST, D_LHS_FORM, D_LOOP_FORM,
+                            D_LOOPVAR_VALUE, D_NO_LOOP, D_NON_AFFINE,
+                            D_NON_INT_STRIDE, D_RANK_MISMATCH,
+                            D_UNKNOWN_CALL, D_UNKNOWN_NAME,
+                            D_UNSUPPORTED_EXPR, D_UNSUPPORTED_STMT,
+                            FrontendDiagnostic, capture)
+
+SHAPES = {"u": (10, 10), "out": (10, 10)}
+
+
+# --------------------------------------------------------------------------
+# the rogues' gallery (offending line marked  # !)
+# --------------------------------------------------------------------------
+
+
+def _nonaffine_product(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i * j, j]  # !
+
+
+def _nonaffine_coupled(u, out):
+    n, m = u.shape
+    for i in range(1, n - 1):
+        for j in range(1, m):
+            out[i, j] = u[i + j, j]  # !
+
+
+def _noninteger_stride(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i / 2, j]  # !
+
+
+def _imperfect_pre_statement(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        out[i, 0] = u[i, 0]  # !
+        for j in range(1, m):
+            out[i, j] = u[i, j]
+
+
+def _imperfect_sibling_loops(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i, j]
+        for j2 in range(1, m):  # !
+            out[i, j2] = u[i, j2]
+
+
+def _if_in_body(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            if j > 2:  # !
+                out[i, j] = u[i, j]
+
+
+def _while_in_body(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            while j < 3:  # !
+                out[i, j] = u[i, j]
+
+
+def _conditional_expression(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i, j] if i > j else u[j, i]  # !
+
+
+def _nonunit_step(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m, 2):  # !
+            out[i, j] = u[i, j]
+
+
+def _nonrange_iterator(u, out):
+    for row in u:  # !
+        out[0, 0] = row
+
+
+def _unknown_call(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = hypot(u[i, j])  # !  # noqa: F821
+
+
+def _unknown_name(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i, j] + alpha  # !  # noqa: F821
+
+
+def _loopvar_as_value(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i, j] * j  # !
+
+
+def _scalar_temporary(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            t = u[i, j] + u[i - 1, j]  # !
+            out[i, j] = t
+
+
+def _lhs_repeated_level(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[j, j] = u[i, j]  # !
+
+
+def _lhs_strided(u, out):
+    n, m = u.shape
+    for i in range(1, 5):
+        for j in range(1, m):
+            out[2 * i, j] = u[i, j]  # !
+
+
+def _rank_mismatch(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i]  # !
+
+
+def _whole_array_reference(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u  # !
+
+
+def _power_operator(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i, j] ** 2  # !
+
+
+def _no_loop_nest(u, out):  # !
+    out[0, 0] = u[0, 0]
+
+
+def _statement_after_nest(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = u[i, j]
+    out[0, 0] = u[0, 0]  # !
+
+
+def _floordiv_augassign(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] //= 2  # !
+
+
+class _FakeMath:
+    @staticmethod
+    def sin(x):
+        return x * 1000.0
+
+
+_filters = _FakeMath()
+
+
+def _custom_callable_named_sin(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(1, m):
+            out[i, j] = _filters.sin(u[i, j])  # !
+
+
+def _empty_loop_range(u, out):
+    n, m = u.shape
+    for i in range(5, 3):  # !
+        for j in range(1, m):
+            out[i, j] = u[i, j]
+
+
+def _triangular_bound(u, out):
+    n, m = u.shape
+    for i in range(1, n):
+        for j in range(0, i):  # !
+            out[i, j] = u[i, j]
+
+
+def _bound_shadowed_by_loop_var(u, out):
+    n = 4
+    for n in range(2, 6):  # the loop var shadows the pre-loop constant
+        for j in range(0, n):  # !  (n varies at runtime; must not fold 4)
+            out[n, j] = u[n, j]
+
+
+REJECTIONS = [
+    (_nonaffine_product, D_NON_AFFINE),
+    (_nonaffine_coupled, D_NON_AFFINE),
+    (_noninteger_stride, D_NON_INT_STRIDE),
+    (_imperfect_pre_statement, D_IMPERFECT_NEST),
+    (_imperfect_sibling_loops, D_IMPERFECT_NEST),
+    (_if_in_body, D_CONTROL_FLOW),
+    (_while_in_body, D_CONTROL_FLOW),
+    (_conditional_expression, D_CONTROL_FLOW),
+    (_nonunit_step, D_LOOP_FORM),
+    (_nonrange_iterator, D_LOOP_FORM),
+    (_unknown_call, D_UNKNOWN_CALL),
+    (_unknown_name, D_UNKNOWN_NAME),
+    (_loopvar_as_value, D_LOOPVAR_VALUE),
+    (_scalar_temporary, D_UNSUPPORTED_STMT),
+    (_lhs_repeated_level, D_LHS_FORM),
+    (_lhs_strided, D_LHS_FORM),
+    (_rank_mismatch, D_RANK_MISMATCH),
+    (_whole_array_reference, D_UNSUPPORTED_EXPR),
+    (_power_operator, D_UNSUPPORTED_EXPR),
+    (_no_loop_nest, D_NO_LOOP),
+    (_statement_after_nest, D_IMPERFECT_NEST),
+    (_floordiv_augassign, D_UNSUPPORTED_STMT),
+    (_triangular_bound, D_LOOP_FORM),
+    (_bound_shadowed_by_loop_var, D_LOOP_FORM),
+    (_custom_callable_named_sin, D_UNKNOWN_CALL),
+    (_empty_loop_range, D_LOOP_FORM),
+]
+
+
+def _marked_line(fn) -> int:
+    lines, start = inspect.getsourcelines(fn)
+    for off, line in enumerate(lines):
+        if "# !" in line:
+            return start + off
+    raise AssertionError(f"{fn.__name__} has no '# !' marker")
+
+
+@pytest.mark.parametrize("fn,code", REJECTIONS,
+                         ids=[f.__name__.lstrip("_") for f, _ in REJECTIONS])
+def test_rejection_yields_structured_diagnostic(fn, code):
+    with pytest.raises(CaptureError) as exc:
+        capture(fn, SHAPES)
+    diag = exc.value.diagnostic
+    assert isinstance(diag, FrontendDiagnostic)
+    assert diag.code == code
+    assert diag.code in ALL_CODES
+    assert diag.message  # never silent, never empty
+    assert diag.line == _marked_line(fn), (
+        f"diagnostic points at line {diag.line}, offending construct is at "
+        f"{_marked_line(fn)}: {diag}")
+    assert diag.col >= 0
+    assert diag.file and diag.file.endswith("test_frontend_diagnostics.py")
+    assert diag.function == fn.__name__
+    # the rendered form carries code + location for log grepping
+    assert code in str(diag) and f":{diag.line}:" in str(diag)
+
+
+def test_rejection_covers_every_published_code():
+    exercised = {code for _, code in REJECTIONS}
+    assert exercised == set(ALL_CODES)
+
+
+def test_missing_shape_is_api_error_not_diagnostic():
+    def k(u, out):
+        n, m = u.shape
+        for i in range(1, n):
+            for j in range(1, m):
+                out[i, j] = u[i, j]
+
+    with pytest.raises(ValueError, match="shape for parameter 'out'"):
+        capture(k, {"u": (10, 10)})
+
+
+def test_capture_error_is_a_value_error():
+    # callers that guard with ValueError keep working
+    with pytest.raises(ValueError):
+        capture(_if_in_body, SHAPES)
