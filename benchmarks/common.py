@@ -36,18 +36,24 @@ def variants(case, auto_level: bool = True):
     return out
 
 
-def time_fn(fn, env, repeats: int = 5, warmup: int = 2):
-    """Median wall time of a jitted evaluator, seconds."""
-    jfn = jax.jit(fn)
+def time_callable(fn, env, repeats: int = 5, warmup: int = 2):
+    """Median wall time of an already-compiled callable (e.g. a
+    ``CompiledRace`` executor), seconds."""
+    res = None
     for _ in range(warmup):
-        res = jfn(env)
+        res = fn(env)
     jax.block_until_ready(res)
     ts = []
     for _ in range(repeats):
         t0 = time.perf_counter()
-        jax.block_until_ready(jfn(env))
+        jax.block_until_ready(fn(env))
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts))
+
+
+def time_fn(fn, env, repeats: int = 5, warmup: int = 2):
+    """Median wall time of a jitted evaluator, seconds."""
+    return time_callable(jax.jit(fn), env, repeats=repeats, warmup=warmup)
 
 
 def csv_line(name: str, us: float, derived: str) -> str:

@@ -4,22 +4,47 @@
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention.
 Sections: table1 (Table 1), speedup (Figs 7-8), scaling (Fig 9),
-memory (Fig 10), roofline (EXPERIMENTS.md section Roofline; reads the
-dry-run JSON and is skipped with a note if the dry-run has not been run).
-Fig 11 (OpenMP thread scaling) has no analogue on this 1-core container;
-its distributed counterpart is the sharded dry-run — noted, not faked.
+memory (Fig 10), serving (PR-3 executor cache: cold vs steady-state µs/call,
+hit rate, batched throughput), roofline (EXPERIMENTS.md section Roofline;
+reads the dry-run JSON and is skipped with a note if the dry-run has not
+been run).  Fig 11 (OpenMP thread scaling) has no analogue on this 1-core
+container; its distributed counterpart is the sharded dry-run — noted, not
+faked.
+
+``--json`` additionally writes each section's structured rows to
+``BENCH_<section>.json`` (machine-readable; CI records ``BENCH_serving.json``
+as the perf-trajectory artifact).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
+
+
+def _jsonable(o):
+    """Recursively coerce numpy scalars/arrays for json.dump."""
+    import numpy as np
+
+    if isinstance(o, dict):
+        return {str(k): _jsonable(v) for k, v in o.items()}
+    if isinstance(o, (list, tuple)):
+        return [_jsonable(v) for v in o]
+    if isinstance(o, np.generic):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    return o
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true", help="smaller sweeps")
     ap.add_argument("--only", type=str, default="")
+    ap.add_argument("--json", action="store_true",
+                    help="also write BENCH_<section>.json with each "
+                         "section's structured rows")
     ap.add_argument("--backend", choices=("xla", "pallas"), default="xla",
                     help="execution backend for the speedup section; "
                          "'pallas' adds a RACE-pallas column (cases the "
@@ -37,7 +62,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     sections = []
-    from . import memory, scaling, speedup, table1
+    from . import memory, scaling, serving, speedup, table1
 
     sections = [
         ("table1", lambda: table1.run()),
@@ -46,6 +71,8 @@ def main() -> None:
             backend=args.backend, interpret=not args.compiled)),
         ("scaling", lambda: scaling.run()),
         ("memory", lambda: memory.run()),
+        ("serving", lambda: serving.run(quick=args.quick,
+                                        interpret=not args.compiled)),
     ]
     if args.from_frontend:
         from . import frontend
@@ -66,7 +93,12 @@ def main() -> None:
         if args.quick and name == "scaling":
             continue
         try:
-            fn()
+            rows = fn()
+            if args.json and rows is not None:
+                path = f"BENCH_{name}.json"
+                with open(path, "w") as f:
+                    json.dump(_jsonable(rows), f, indent=1, default=str)
+                print(f"json.{name},0.00,wrote={path}")
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}")

@@ -1,0 +1,108 @@
+"""Serving benchmark for the plan-keyed compiled-executor cache (PR 3).
+
+Measures what steady-state serving actually pays per call once the executor
+cache is warm, against what the first (cold) call pays — specialization,
+tracing, XLA compilation — plus the batched-throughput path:
+
+  * ``cold_ms``       first ``RaceResult.run`` on an empty cache;
+  * ``us_per_call``   median steady-state per-call wall time (cache hot);
+  * ``cold_over_steady``  the compile-amortization ratio;
+  * ``hit_rate``/``retraces``  executor-cache hit rate over the steady
+    phase and the executor's trace counter (must stay at 1: the zero-retrace
+    guarantee);
+  * ``batchB_us_per_item``/``batch_ips``  per-item cost and items/sec of
+    ``run_batch`` vmapping one compiled executor over a B-stack.
+
+Pallas rows run in interpret mode on CPU containers — correctness-plus-
+caching signal only; absolute kernel timings need a TPU (``--compiled``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+
+from repro.apps.paper_kernels import get_case
+from repro.core.backend import select_backend
+from repro.core.executor import compile_plan, executor_cache
+from repro.core.race import race
+
+from .common import build_env, csv_line
+
+#: (case, grid size) pairs: one 2-D transcendental, one 2-D halo-heavy,
+#: one 3-D — small enough that interpret-mode Pallas stays in budget
+CASES = [("calc_tpoints", 64), ("gaussian", 64), ("psinv", 16)]
+
+
+def _bench_backend(res, case, backend, repeats, batch, interpret,
+                   block_rows=8, block_cols=8):
+    cache = executor_cache()
+    cache.clear()
+    env = build_env(case)
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(res.run(env, backend, interpret=interpret))
+    cold = time.perf_counter() - t0
+
+    s0 = cache.stats.snapshot()
+    ts = []
+    for _ in range(repeats):
+        t1 = time.perf_counter()
+        jax.block_until_ready(res.run(env, backend, interpret=interpret))
+        ts.append(time.perf_counter() - t1)
+    steady = float(np.median(ts))
+    s1 = cache.stats.snapshot()
+    served = (s1["hits"] + s1["misses"]) - (s0["hits"] + s0["misses"])
+    hit_rate = (s1["hits"] - s0["hits"]) / served if served else 0.0
+
+    ex = compile_plan(res.plan, env, backend, block_rows=block_rows,
+                      block_cols=block_cols, interpret=interpret)
+    envs = [build_env(case, seed=s) for s in range(batch)]
+    jax.block_until_ready(ex.run_batch(envs))  # warm the batched trace
+    t2 = time.perf_counter()
+    jax.block_until_ready(ex.run_batch(envs))
+    t_batch = time.perf_counter() - t2
+
+    return dict(
+        case=case.name, backend=backend, cold_ms=cold * 1e3,
+        us_per_call=steady * 1e6, cold_over_steady=cold / max(steady, 1e-12),
+        hit_rate=hit_rate, retraces=ex.trace_count, batch=batch,
+        batch_us_per_item=t_batch / batch * 1e6,
+        batch_ips=batch / max(t_batch, 1e-12),
+        cache_entries=len(cache),
+    )
+
+
+def run(print_fn=print, quick: bool = False, repeats: int = None,
+        batch: int = None, interpret: bool = True):
+    """Returns one row per (case, backend); CSV is printed en route."""
+    repeats = repeats or (5 if quick else 20)
+    batch = batch or (4 if quick else 8)
+    rows = []
+    for name, n in CASES[:2] if quick else CASES:
+        case = get_case(name, n)
+        res = race(case.program, reassociate=case.reassociate,
+                   rewrite_div=case.rewrite_div)
+        backends = ["xla"]
+        if select_backend(res.plan, "auto").backend == "pallas":
+            backends.append("pallas")
+        for backend in backends:
+            row = _bench_backend(res, case, backend, repeats, batch,
+                                 interpret)
+            derived = (f"cold_ms={row['cold_ms']:.1f}"
+                       f";cold_over_steady={row['cold_over_steady']:.0f}x"
+                       f";hit_rate={row['hit_rate']:.2f}"
+                       f";retraces={row['retraces']}"
+                       f";batch{batch}_us_per_item="
+                       f"{row['batch_us_per_item']:.1f}"
+                       f";batch_ips={row['batch_ips']:.0f}")
+            print_fn(csv_line(f"serving.{name}.{backend}",
+                              row["us_per_call"], derived))
+            rows.append(row)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -85,8 +85,11 @@ def main():
     fe_res = kern.trace({nm: np.shape(v) for nm, v in env.items()})
     assert fe_res.program == case.program, "frontend/DSL divergence"
     want_fe = kref.reference_plan(fe_res.plan, env)  # interior convention
+    # kern.run is the jitted executor path; XLA fusion reorders f32 rounding
+    # relative to the eager oracle, so compare at same-plan f32 tolerance
     np.testing.assert_allclose(np.asarray(fe_out["j27"]),
-                               np.asarray(want_fe["j27"]), rtol=1e-6)
+                               np.asarray(want_fe["j27"]),
+                               rtol=1e-5, atol=1e-5)
     print(f"  @race_kernel frontend: captured identical program, "
           f"ran in {t_fe*1e3:.1f} ms (capture "
           f"{kern.last_capture_seconds*1e3:.1f} ms) — frontend == DSL: OK")

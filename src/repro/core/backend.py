@@ -38,6 +38,7 @@ R_FRACTIONAL_OFFSET = "fractional-offset"
 R_MIXED_STRIDE = "mixed-stride"
 R_INCONSISTENT_LAYOUT = "inconsistent-layout"
 R_STRIDED_AUX = "strided-aux"
+R_NO_BASE_ARRAY = "no-base-array"
 
 
 @dataclass(frozen=True)
@@ -185,6 +186,13 @@ def probe_pallas(plan: Plan) -> Capability:
         probe_expr(st.rhs, f"main statement {st.lhs.name}")
     for aux in plan.aux_order:
         probe_expr(plan.aux_exprs[aux.name], f"aux {aux.name}")
+
+    if plan.body and not per_array and not reasons:
+        # scalar-only right-hand sides: the kernel would have nothing to
+        # tile (and its dtype inference nothing to look at)
+        reasons.append(FallbackReason(
+            R_NO_BASE_ARRAY,
+            "no array operand on any right-hand side (scalar-only data)"))
 
     # dedupe while keeping first-seen order
     uniq, seen = [], set()

@@ -31,6 +31,23 @@ import jax.numpy as jnp
 from .depgraph import Plan
 from .ir import Const, Expr, FuncName, Node, Program, Ref, Stmt
 
+# jax<=0.4.x has no batching rule for optimization_barrier, which breaks
+# vmap over the plan evaluator (the executor's run_batch path); the barrier
+# is shape-identity, so the trivial rule is correct.
+def _register_barrier_batching():
+    try:
+        from jax._src.lax.lax import optimization_barrier_p as _p
+        from jax.interpreters import batching
+
+        if _p not in batching.primitive_batchers:
+            batching.primitive_batchers[_p] = \
+                lambda args, dims: (_p.bind(*args), dims)
+    except Exception:  # pragma: no cover - newer jax ships its own rule
+        pass
+
+
+_register_barrier_batching()
+
 FUNCS = {
     "sin": jnp.sin,
     "cos": jnp.cos,
@@ -116,14 +133,23 @@ def _eval_ref(ref: Ref, bufs: dict, domain_levels: tuple, ranges: dict):
     return data[tuple(idxs)]
 
 
-def _eval_expr(e: Expr, bufs: dict, domain_levels: tuple, ranges: dict):
+def _eval_expr(e: Expr, bufs: dict, domain_levels: tuple, ranges: dict,
+               memo: dict = None):
     if isinstance(e, Ref):
-        return _eval_ref(e, bufs, domain_levels, ranges)
+        # the same Ref often occurs many times in one statement (that is the
+        # reuse RACE detects); slice it once per statement, not per occurrence
+        if memo is None:
+            return _eval_ref(e, bufs, domain_levels, ranges)
+        val = memo.get(e)
+        if val is None:
+            val = memo[e] = _eval_ref(e, bufs, domain_levels, ranges)
+        return val
     if isinstance(e, Const):
         return e.val
     if isinstance(e, FuncName):  # only under 'call'
         raise ValueError("bare function name")
-    ev = partial(_eval_expr, bufs=bufs, domain_levels=domain_levels, ranges=ranges)
+    ev = partial(_eval_expr, bufs=bufs, domain_levels=domain_levels,
+                 ranges=ranges, memo=memo)
     if e.op == "call":
         return FUNCS[e.kids[0].name](ev(e.kids[1]))
     if e.op == "neg":
@@ -178,7 +204,7 @@ def build_plan_evaluator(plan: Plan):
         for aux in plan.aux_order:
             rng = plan.ranges[aux.name]
             levels = tuple(sorted(aux.levels))
-            val = _eval_expr(plan.aux_exprs[aux.name], bufs, levels, rng)
+            val = _eval_expr(plan.aux_exprs[aux.name], bufs, levels, rng, {})
             shape = tuple(rng[l][1] - rng[l][0] + 1 for l in levels)
             val = jnp.broadcast_to(val, shape)
             # force a materialization boundary: XLA's fusion otherwise
@@ -189,7 +215,8 @@ def build_plan_evaluator(plan: Plan):
             bufs[aux.name] = _Buf(val, tuple(rng[l][0] for l in levels))
         out: dict = {}
         for st in plan.body:
-            val = _eval_expr(st.rhs, bufs, all_levels, full)
+            # fresh memo per statement: bufs mutates between statements
+            val = _eval_expr(st.rhs, bufs, all_levels, full, {})
             _write_stmt(st, val, out, env, full, all_levels)
             bufs[st.lhs.name] = out[st.lhs.name]
         return out
@@ -206,7 +233,7 @@ def build_baseline_evaluator(program: Program):
         bufs: dict = dict(env)
         out: dict = {}
         for st in program.body:
-            val = _eval_expr(st.rhs, bufs, all_levels, full)
+            val = _eval_expr(st.rhs, bufs, all_levels, full, {})
             _write_stmt(st, val, out, env, full, all_levels)
             bufs[st.lhs.name] = out[st.lhs.name]
         return out

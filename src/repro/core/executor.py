@@ -1,0 +1,419 @@
+"""Plan-keyed compiled executor cache: hash-specialized jit reuse.
+
+RACE's detection hashes expression structure to expose *computation* reuse
+inside one program (paper Section 5).  This module applies the same idea one
+level up, to the serving runtime itself: a canonical structural hash over the
+executable :class:`~repro.core.depgraph.Plan` becomes the key of a
+process-wide compiled-executor cache, so the reuse pattern of steady-state
+serving — the same stencil executed again and again on same-shaped data —
+pays trace, compile, and host-side prep costs exactly once.
+
+Layers:
+
+  * :func:`plan_fingerprint` / :func:`plan_hash` — canonical serialization of
+    a plan's executable structure (loop ranges, statements, auxiliary
+    definitions; loop *variable names* are cosmetic and excluded), memoized
+    on the plan instance;
+  * :class:`CompiledRace` — one specialization per ``(plan hash, env
+    signature, backend, block config)``: the XLA evaluator path jitted (the
+    pre-PR-3 ``RaceResult.run`` re-jitted on *every* call), or the Pallas
+    path split into a one-time :func:`~repro.kernels.race_stencil.
+    specialize_stencil` and a jitted per-call data path; optional
+    ``donate_argnums`` output-buffer reuse; a lazily-built ``jax.vmap``
+    batch variant for throughput serving (:meth:`CompiledRace.run_batch`);
+  * :class:`ExecutorCache` — thread-safe process-wide LRU with hit/miss/
+    eviction stats; :func:`compile_plan` is the front door every consumer
+    (``RaceResult.run``, the ``@race_kernel`` frontend, the differential
+    harness, the benchmarks) goes through.
+
+Zero-retrace guarantee: a second ``run()`` with the same signature is a
+cache hit returning the *same* ``CompiledRace``, whose jitted callable hits
+the jax jit cache — ``CompiledRace.trace_count`` (incremented only while
+tracing) stays at 1; tests assert this on both backends.
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from fractions import Fraction
+from typing import Callable, Mapping, Optional, Sequence, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from .backend import Selection, select_backend
+from .depgraph import Plan
+from .ir import Const, Expr, FuncName, Node, Ref
+
+# ---------------------------------------------------------------------------
+# canonical structural hash over plans
+# ---------------------------------------------------------------------------
+
+
+def _tok(e: Expr) -> tuple:
+    """Canonical token tree of an expression (hash-stable across processes)."""
+    if isinstance(e, Ref):
+        return ("ref", e.name, tuple(
+            (s.a, s.s, Fraction(s.b).numerator, Fraction(s.b).denominator)
+            for s in e.subs))
+    if isinstance(e, Const):
+        return ("const", repr(float(e.val)))
+    if isinstance(e, FuncName):
+        return ("func", e.name)
+    if isinstance(e, Node):
+        return ("node", e.op) + tuple(_tok(k) for k in e.kids)
+    raise TypeError(f"unknown expression node {e!r}")
+
+
+def plan_fingerprint(plan: Plan) -> tuple:
+    """Canonical nested-tuple serialization of a plan's executable structure.
+
+    Covers exactly what the compiled artifact depends on: loop levels and
+    ranges, the post-contraction main statements, and every materialized
+    auxiliary (definition expression, levels, propagated ranges) in emission
+    order.  Loop variable names are excluded — two plans differing only in
+    spelling produce identical executables and must share a cache entry.
+    """
+    prog = plan.program
+    return (
+        "race-plan-v1",
+        tuple((l.level, l.lo, l.hi) for l in prog.loops),
+        tuple((_tok(st.lhs), _tok(st.rhs)) for st in plan.body),
+        tuple((a.name, tuple(a.levels), _tok(plan.aux_exprs[a.name]),
+               tuple(sorted(plan.ranges[a.name].items())))
+              for a in plan.aux_order),
+        tuple(sorted(plan.local)),
+    )
+
+
+def plan_hash(plan: Plan) -> str:
+    """16-hex-digit structural hash of a plan, memoized on the instance."""
+    h = getattr(plan, "_structural_hash", None)
+    if h is None:
+        h = hashlib.sha256(
+            repr(plan_fingerprint(plan)).encode()).hexdigest()[:16]
+        plan._structural_hash = h
+    return h
+
+
+# ---------------------------------------------------------------------------
+# environment signatures
+# ---------------------------------------------------------------------------
+
+
+def dtype_of(v) -> np.dtype:
+    """Signature dtype of an env entry (no array-data copies)."""
+    dt = getattr(v, "dtype", None)
+    return np.dtype(dt) if dt is not None else np.asarray(v).dtype
+
+
+def _dtype_name(v) -> str:
+    return dtype_of(v).name
+
+
+def _is_weak(v) -> bool:
+    """jax weak-type flag of an env entry: weak and strong scalars of the
+    same dtype trace differently under jit, so the flag must be in the key
+    (or mixing them would silently retrace a cached executor)."""
+    wt = getattr(v, "weak_type", None)
+    if wt is not None:
+        return bool(wt)
+    return (isinstance(v, (bool, int, float, complex))
+            and not isinstance(v, np.generic))
+
+
+def env_signature(env: Mapping) -> tuple:
+    """``((name, shape, dtype, weak_type), ...)`` sorted by name — the
+    shapes/dtypes half of the executor key.  Cheap: never copies data."""
+    return tuple(
+        (nm, tuple(np.shape(env[nm])), _dtype_name(env[nm]),
+         _is_weak(env[nm]))
+        for nm in sorted(env))
+
+
+def stacked_signature(stacked: Mapping) -> tuple:
+    """Per-example signature of a batch-stacked env (leading axis removed)."""
+    sig = []
+    for nm in sorted(stacked):
+        shp = tuple(np.shape(stacked[nm]))
+        if not shp:
+            raise ValueError(
+                f"stacked env entry {nm!r} is a bare scalar; every entry "
+                f"needs a leading batch axis")
+        sig.append((nm, shp[1:], _dtype_name(stacked[nm]),
+                    _is_weak(stacked[nm])))
+    return tuple(sig)
+
+
+@dataclass(frozen=True)
+class ExecutorKey:
+    """Full identity of one compiled specialization."""
+
+    plan: str  # structural plan hash
+    env: tuple  # env_signature
+    backend: str  # resolved: "xla" | "pallas"
+    blocks: Optional[tuple]  # (block_rows, block_cols, interpret) | None (xla)
+    donate: bool
+
+
+# ---------------------------------------------------------------------------
+# compiled executor
+# ---------------------------------------------------------------------------
+
+
+class CompiledRace:
+    """One compiled specialization of a plan: a reusable jitted callable.
+
+    Built once per :class:`ExecutorKey` and cached process-wide; calling it
+    with any same-signature env reuses the jitted computation without
+    retracing.  ``trace_count`` increments only while jax traces the call
+    path, so it is the retrace detector the tests assert on.
+    """
+
+    def __init__(self, plan: Plan, env_sig: tuple, selection: Selection, *,
+                 block_rows: int = 8, block_cols: int = 8,
+                 interpret: bool = True, donate: bool = False):
+        self.plan = plan
+        self.env_sig = env_sig
+        self.selection = selection
+        self.backend = selection.backend
+        self.block_rows = block_rows
+        self.block_cols = block_cols
+        self.interpret = interpret
+        self.donate = donate
+        self.calls = 0
+        self.batch_calls = 0
+        self.trace_count = 0
+        self.batch_trace_count = 0
+        self._out_names = frozenset(st.lhs.name for st in plan.body)
+        self._batch_lock = threading.Lock()
+        self._batch_jit = None
+
+        if self.backend == "pallas":
+            from repro.kernels.race_stencil import specialize_stencil
+
+            self.spec = specialize_stencil(
+                plan,
+                {nm: shp for nm, shp, *_ in env_sig},
+                {nm: np.dtype(dt) for nm, _, dt, *_ in env_sig},
+                block_rows=block_rows, block_cols=block_cols,
+                interpret=interpret)
+            core = self.spec.apply
+        else:
+            from repro.kernels.ref import interior
+
+            from .codegen import build_plan_evaluator
+
+            self.spec = None
+            plan_run = build_plan_evaluator(plan)
+            core = lambda env: interior(plan, plan_run(env))  # noqa: E731
+        self._core = core
+
+        def _call(env_in, env_out):
+            self.trace_count += 1  # python side effect: fires at trace only
+            return core({**env_in, **env_out})
+
+        jit_kw = dict(donate_argnums=(1,)) if donate else {}
+        self._jit = jax.jit(_call, **jit_kw)
+
+    # -- single-env path ----------------------------------------------------
+
+    def _split(self, env: Mapping) -> tuple:
+        """Separate output-named entries so they can be donated (arg 1)."""
+        outs = {k: v for k, v in env.items() if k in self._out_names}
+        ins = {k: v for k, v in env.items() if k not in self._out_names}
+        return ins, outs
+
+    def run(self, env: Mapping) -> dict:
+        """Execute on the compiled path; returns interior-convention outputs."""
+        self.calls += 1
+        ins, outs = self._split(env)
+        return self._jit(ins, outs)
+
+    __call__ = run
+
+    # -- batched path -------------------------------------------------------
+
+    def run_batch(self, envs: Union[Mapping, Sequence[Mapping]]) -> dict:
+        """vmap the compiled executor over a stacked batch dimension.
+
+        ``envs`` is either a sequence of same-signature envs (stacked here)
+        or an already-stacked env dict whose *every* entry carries a leading
+        batch axis (scalars as ``(B,)`` arrays).  Returns ``{output name:
+        (B, ...) array}`` — element ``[b]`` equals ``run(envs[b])[name]``.
+        """
+        if isinstance(envs, Mapping):
+            stacked = {k: jnp.asarray(v) for k, v in envs.items()}
+        else:
+            envs = list(envs)
+            if not envs:
+                raise ValueError("run_batch needs at least one env")
+            stacked = {k: jnp.stack([jnp.asarray(e[k]) for e in envs])
+                       for k in envs[0]}
+        if self._batch_jit is None:
+            with self._batch_lock:
+                if self._batch_jit is None:
+                    core = self._core
+
+                    def _bcall(env):
+                        self.batch_trace_count += 1
+                        return core(env)
+
+                    self._batch_jit = jax.jit(jax.vmap(_bcall))
+        self.batch_calls += 1
+        return self._batch_jit(stacked)
+
+    # -- introspection ------------------------------------------------------
+
+    def cache_info(self) -> dict:
+        return dict(backend=self.backend, calls=self.calls,
+                    batch_calls=self.batch_calls,
+                    trace_count=self.trace_count,
+                    batch_trace_count=self.batch_trace_count,
+                    jit_cache_size=getattr(self._jit, "_cache_size",
+                                           lambda: None)())
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging sugar
+        return (f"<CompiledRace {self.backend} plan={plan_hash(self.plan)} "
+                f"calls={self.calls} traces={self.trace_count}>")
+
+
+# ---------------------------------------------------------------------------
+# process-wide LRU cache
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def snapshot(self) -> dict:
+        return dict(hits=self.hits, misses=self.misses,
+                    evictions=self.evictions, hit_rate=self.hit_rate)
+
+
+class ExecutorCache:
+    """Thread-safe LRU of :class:`CompiledRace` executors.
+
+    The build happens under the lock: specialization is milliseconds (the
+    expensive XLA compile is lazy, at the executor's first call, and jax's
+    own jit cache is thread-safe), and building inside guarantees exactly
+    one miss and one executor per key under concurrent first calls.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        self.maxsize = maxsize
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    def get_or_build(self, key: ExecutorKey,
+                     builder: Callable[[], CompiledRace]) -> CompiledRace:
+        with self._lock:
+            ex = self._entries.get(key)
+            if ex is not None:
+                self._entries.move_to_end(key)
+                self.stats.hits += 1
+                return ex
+            self.stats.misses += 1
+            ex = self._entries[key] = builder()
+            while len(self._entries) > self.maxsize:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+            return ex
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.stats = CacheStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: ExecutorKey) -> bool:
+        return key in self._entries
+
+    def keys(self) -> list:
+        with self._lock:
+            return list(self._entries)
+
+
+_CACHE = ExecutorCache()
+
+
+def executor_cache() -> ExecutorCache:
+    """The process-wide cache (shared by every ``RaceResult.run``)."""
+    return _CACHE
+
+
+def cache_stats() -> dict:
+    return _CACHE.stats.snapshot()
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def configure_cache(maxsize: int) -> None:
+    """Resize the process-wide cache (evicts LRU entries if shrinking)."""
+    with _CACHE._lock:
+        _CACHE.maxsize = maxsize
+        while len(_CACHE._entries) > maxsize:
+            _CACHE._entries.popitem(last=False)
+            _CACHE.stats.evictions += 1
+
+
+# ---------------------------------------------------------------------------
+# front door
+# ---------------------------------------------------------------------------
+
+
+def _resolve(plan: Plan, backend: str) -> Selection:
+    """select_backend memoized per plan instance (probe is pure analysis)."""
+    memo = getattr(plan, "_selection_memo", None)
+    if memo is None:
+        memo = plan._selection_memo = {}
+    sel = memo.get(backend)
+    if sel is None:
+        sel = memo[backend] = select_backend(plan, backend)
+    return sel
+
+
+def compile_plan(plan: Plan, env: Union[Mapping, tuple],
+                 backend: str = "auto", *, block_rows: int = 8,
+                 block_cols: int = 8, interpret: bool = True,
+                 donate: Optional[bool] = None,
+                 cache: Optional[ExecutorCache] = None) -> CompiledRace:
+    """Fetch (or build) the compiled executor for this (plan, env) pairing.
+
+    ``env`` is either an environment mapping or a precomputed
+    :func:`env_signature`.  ``donate=True`` opts into ``donate_argnums``
+    output-buffer reuse on accelerator backends: env entries named like plan
+    outputs are *consumed* by every call, so the caller must re-supply fresh
+    buffers each time — hence off by default (and forced off on CPU, which
+    ignores donation and would warn per call).
+    """
+    sig = env if isinstance(env, tuple) else env_signature(env)
+    sel = _resolve(plan, backend)
+    if donate is None:
+        donate = False
+    elif donate and jax.default_backend() in ("cpu",):
+        donate = False
+    blocks = ((block_rows, block_cols, bool(interpret))
+              if sel.backend == "pallas" else None)
+    key = ExecutorKey(plan_hash(plan), sig, sel.backend, blocks, bool(donate))
+    c = cache if cache is not None else _CACHE
+    return c.get_or_build(key, lambda: CompiledRace(
+        plan, sig, sel, block_rows=block_rows, block_cols=block_cols,
+        interpret=interpret, donate=bool(donate)))

@@ -74,24 +74,54 @@ class RaceResult:
         return select_backend(self.plan, backend or self.options.get("backend", "auto"))
 
     def run(self, env: dict, backend: Optional[str] = None, *,
-            block_rows: int = 8, block_cols: int = 8, interpret: bool = True):
+            block_rows: int = 8, block_cols: int = 8, interpret: bool = True,
+            donate: Optional[bool] = None):
         """Execute the plan on the selected backend.
 
         Both backends return the *interior* convention — ``{output name:
         array over the statement ranges}`` — so results are directly
         comparable across backends.  ``backend=None`` uses the request
         recorded by :func:`race` (``"auto"`` prefers Pallas when eligible).
+
+        Execution goes through the plan-keyed compiled-executor cache
+        (:mod:`repro.core.executor`): the first call per (plan structure,
+        shapes/dtypes, backend, block config) specializes and jits; every
+        later same-signature call — including calls on a *different*
+        ``RaceResult`` holding a structurally identical plan — reuses the
+        compiled executor with zero retracing.
         """
-        from .codegen import build_evaluator
+        from .executor import compile_plan
 
-        fn, sel = build_evaluator(
-            self.plan, backend or self.options.get("backend", "auto"),
-            block_rows=block_rows, block_cols=block_cols, interpret=interpret)
-        if sel.backend == "pallas":
-            import jax
+        ex = compile_plan(
+            self.plan, env, backend or self.options.get("backend", "auto"),
+            block_rows=block_rows, block_cols=block_cols,
+            interpret=interpret, donate=donate)
+        return ex(env)
 
-            fn = jax.jit(fn)
-        return fn(env)
+    def run_batch(self, envs, backend: Optional[str] = None, *,
+                  block_rows: int = 8, block_cols: int = 8,
+                  interpret: bool = True, donate: Optional[bool] = None):
+        """Batched execution: one compiled executor vmapped over ``envs``.
+
+        ``envs`` is a sequence of same-signature environments, or an
+        already-stacked env dict whose every entry carries a leading batch
+        axis (scalars as ``(B,)`` arrays).  Returns ``{output name: (B, ...)
+        array}`` with ``out[name][b] == run(envs[b])[name]``.
+        """
+        from .executor import compile_plan, env_signature, stacked_signature
+
+        if isinstance(envs, dict):
+            sig = stacked_signature(envs)
+        else:
+            envs = list(envs)
+            if not envs:
+                raise ValueError("run_batch needs at least one env")
+            sig = env_signature(envs[0])
+        ex = compile_plan(
+            self.plan, sig, backend or self.options.get("backend", "auto"),
+            block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+            donate=donate)
+        return ex.run_batch(envs)
 
     # --- pretty ------------------------------------------------------------
     def to_source(self) -> str:

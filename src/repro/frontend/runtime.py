@@ -15,7 +15,11 @@ Wraps a plain-Python loop nest so it runs through the whole RACE pipeline
 
 Programs and :class:`~repro.core.race.RaceResult` objects are cached per
 (shapes, consts, options) signature, so repeated ``run`` calls with
-same-shaped inputs pay capture + detection once.
+same-shaped inputs pay capture + detection once.  Execution itself flows
+through the plan-keyed compiled-executor cache (:mod:`repro.core.executor`),
+so repeated ``run``/``run_batch`` calls also pay trace + compile + host-side
+prep exactly once per signature — steady-state serving stays on a fully
+compiled path.
 """
 from __future__ import annotations
 
@@ -76,14 +80,16 @@ class RaceKernel:
     # -- execution ----------------------------------------------------------
 
     def _shapes_from_env(self, env: Mapping,
-                         consts: Optional[Mapping] = None) -> dict:
+                         consts: Optional[Mapping] = None,
+                         batched: bool = False) -> dict:
         skip = set(consts or ())  # const-bound params need no env entry
         missing = [p for p in self.params if p not in env and p not in skip]
         if missing:
             raise ValueError(
                 f"{self.fn.__name__} needs inputs for parameters {missing}; "
                 f"got {sorted(env)}")
-        return {p: np.shape(env[p]) for p in self.params if p not in skip}
+        return {p: np.shape(env[p])[1:] if batched else np.shape(env[p])
+                for p in self.params if p not in skip}
 
     def run(self, env: Mapping, backend: Optional[str] = None,
             consts: Optional[Mapping] = None, **run_kw) -> dict:
@@ -99,6 +105,25 @@ class RaceKernel:
         return res.run(dict(env), backend=backend, **run_kw)
 
     __call__ = run
+
+    def run_batch(self, envs, backend: Optional[str] = None,
+                  consts: Optional[Mapping] = None, **run_kw) -> dict:
+        """Batched serving: capture once, vmap one compiled executor over a
+        stack of same-signature environments (see
+        :meth:`repro.core.race.RaceResult.run_batch`).  ``envs`` is a
+        sequence of env mappings, or an already-stacked env dict whose every
+        entry carries a leading batch axis; returns ``{output: (B, ...)
+        array}``."""
+        if isinstance(envs, Mapping):
+            res = self.trace(
+                self._shapes_from_env(envs, consts, batched=True), consts)
+            return res.run_batch(dict(envs), backend=backend, **run_kw)
+        envs = list(envs)
+        if not envs:
+            raise ValueError("run_batch needs at least one env")
+        res = self.trace(self._shapes_from_env(envs[0], consts), consts)
+        return res.run_batch([dict(e) for e in envs], backend=backend,
+                             **run_kw)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging sugar
         return (f"<race_kernel {self.fn.__name__} "

@@ -37,6 +37,7 @@ capability probe in ``repro.core.backend`` reports the precise reason.
 from __future__ import annotations
 
 import itertools
+from dataclasses import dataclass
 from fractions import Fraction
 from functools import partial
 
@@ -209,6 +210,7 @@ def _build_kernel(plan: Plan, ext, scalar_names, base_names, out_names,
 
         env_scalar = {nm: scal[0, i] for i, nm in enumerate(scalar_names)}
         aux_vals = {}
+        ref_memo = {}  # (Ref, ext) -> sliced window; dedup repeated refs
 
         def ev(e: Expr, re):
             """Evaluate e over the tile extended by re (per level); result
@@ -218,42 +220,12 @@ def _build_kernel(plan: Plan, ext, scalar_names, base_names, out_names,
             if isinstance(e, Ref):
                 if not e.subs:
                     return env_scalar[e.name]
-                if e.name in aux_vals:
-                    sh = _ref_shift(e)
-                    val, store_ext, covered = aux_vals[e.name]
-                    sl = []
-                    for lvl in range(1, m + 1):
-                        if lvl in covered:
-                            s0 = store_ext[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
-                            sl.append(slice(s0, s0 + _tile_width(lvl, re)))
-                        else:
-                            sl.append(slice(0, 1))
-                    return val[tuple(sl)]
-                info = _ref_affine(e)
-                w = windows[e.name]
-                covered = levels_of[e.name]
-                sl = []
-                for lvl in covered:
-                    a, b = info[lvl]
-                    width = _tile_width(lvl, re)
-                    if lvl in blocks:
-                        # window = 3 input blocks of a*tile; "cur" starts at
-                        # a*tile; output pos r at shift b -> a*r + b + a*tile
-                        s0 = a * blocks[lvl] + b - a * re[lvl - 1]
-                    else:
-                        s0 = pad_in[e.name][lvl - 1] + b - a * re[lvl - 1]
-                    sl.append(slice(s0, s0 + a * (width - 1) + 1, a))
-                v = w[tuple(sl)]
-                # insert size-1 axes at missing levels
-                shape = []
-                k = 0
-                for lvl in range(1, m + 1):
-                    if lvl in covered:
-                        shape.append(v.shape[k])
-                        k += 1
-                    else:
-                        shape.append(1)
-                return v.reshape(shape)
+                key = (e, tuple(re))
+                hit = ref_memo.get(key)
+                if hit is not None:
+                    return hit
+                ref_memo[key] = val = _ev_ref(e, re)
+                return val
             if isinstance(e, Node):
                 if e.op == "call":
                     return _FUNCS[e.kids[0].name](ev(e.kids[1], re))
@@ -264,6 +236,44 @@ def _build_kernel(plan: Plan, ext, scalar_names, base_names, out_names,
                 a, b = ev(e.kids[0], re), ev(e.kids[1], re)
                 return {"+": a + b, "-": a - b, "*": a * b, "/": a / b}[e.op]
             raise TypeError(e)
+
+        def _ev_ref(e: Ref, re):
+            if e.name in aux_vals:
+                sh = _ref_shift(e)
+                val, store_ext, covered = aux_vals[e.name]
+                sl = []
+                for lvl in range(1, m + 1):
+                    if lvl in covered:
+                        s0 = store_ext[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
+                        sl.append(slice(s0, s0 + _tile_width(lvl, re)))
+                    else:
+                        sl.append(slice(0, 1))
+                return val[tuple(sl)]
+            info = _ref_affine(e)
+            w = windows[e.name]
+            covered = levels_of[e.name]
+            sl = []
+            for lvl in covered:
+                a, b = info[lvl]
+                width = _tile_width(lvl, re)
+                if lvl in blocks:
+                    # window = 3 input blocks of a*tile; "cur" starts at
+                    # a*tile; output pos r at shift b -> a*r + b + a*tile
+                    s0 = a * blocks[lvl] + b - a * re[lvl - 1]
+                else:
+                    s0 = pad_in[e.name][lvl - 1] + b - a * re[lvl - 1]
+                sl.append(slice(s0, s0 + a * (width - 1) + 1, a))
+            v = w[tuple(sl)]
+            # insert size-1 axes at missing levels
+            shape = []
+            k = 0
+            for lvl in range(1, m + 1):
+                if lvl in covered:
+                    shape.append(v.shape[k])
+                    k += 1
+                else:
+                    shape.append(1)
+            return v.reshape(shape)
 
         # auxiliary arrays: VMEM values (the contraction payoff)
         for nm in aux_names:
@@ -278,20 +288,83 @@ def _build_kernel(plan: Plan, ext, scalar_names, base_names, out_names,
 
 
 # ---------------------------------------------------------------------------
-# host-side call
+# host-side call: specialize-time phase vs per-call data path
 # ---------------------------------------------------------------------------
+#
+# ``specialize_stencil`` does every shape-dependent but data-independent step
+# once — geometry, halo checks, pad/slice amounts, BlockSpecs, grid, kernel
+# closure, the ``pl.pallas_call`` construction itself — and returns a
+# ``StencilSpec`` whose ``apply(env)`` is the pure per-call data path
+# (transpose/pad/slice/pallas_call/unpad), fully ``jax.jit``-traceable and
+# ``jax.vmap``-batchable.  ``race_stencil_call`` keeps the original one-shot
+# signature by chaining the two.
 
 
-def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
-                      block_cols: int = 8, interpret: bool = True):
-    """Execute the plan's main statements with a blocked Pallas kernel.
+@dataclass
+class _ArrayPrep:
+    """Per-call data movement for one base array (static amounts)."""
 
-    The grid tiles level 1 by ``block_rows``; 3-D nests additionally tile
-    level 2 by ``block_cols`` (the innermost level always stays full-width).
-    env maps base array names -> arrays (laid out as in the program) and
-    scalar names -> scalars.  Returns {output name: interior array} shaped by
-    the statement ranges (level-major layout transposed back to each output's
-    own dim order)."""
+    tperm: tuple  # transpose into ascending-level order, or () if identity
+    pads: tuple  # per-axis (left, right) zero pad
+    sls: tuple  # per-axis window slice after padding
+    n_copies: int  # 3**len(blocked levels): one input per halo offset combo
+
+
+@dataclass
+class StencilSpec:
+    """Specialize-time product for one (plan, shapes, dtypes, block config).
+
+    Everything here is static; :meth:`apply` only performs traceable array
+    ops, so one spec serves arbitrarily many calls (and batches) without
+    redoing host-side prep."""
+
+    plan: Plan
+    scalar_names: tuple
+    base_names: tuple
+    out_names: tuple
+    dt: object  # result dtype of the kernel operands/outputs
+    prep: dict  # base name -> _ArrayPrep
+    extents: tuple
+    out_axes: dict  # out name -> inverse level-major transpose, or ()
+    interpret: bool
+    _call: object = None  # the constructed pl.pallas_call callable
+
+    def apply(self, env: dict) -> dict:
+        """The per-call data path (traceable; shapes must match the spec)."""
+        scal = jnp.array([[env[nm] for nm in self.scalar_names]],
+                         dtype=self.dt) \
+            if self.scalar_names else jnp.zeros((1, 1), self.dt)
+        ins = [scal]
+        for nm in self.base_names:
+            pr = self.prep[nm]
+            arr = jnp.asarray(env[nm])
+            if pr.tperm:
+                arr = jnp.transpose(arr, pr.tperm)
+            if any(l or r for l, r in pr.pads):
+                arr = jnp.pad(arr, pr.pads)
+            arr = arr[pr.sls]
+            ins.extend([arr] * pr.n_copies)
+        outs = self._call(*ins)
+        result = {}
+        for nm, arr in zip(self.out_names, outs):
+            arr = arr[tuple(slice(0, e) for e in self.extents)]
+            axes = self.out_axes[nm]
+            result[nm] = jnp.transpose(arr, axes) if axes else arr
+        return result
+
+    __call__ = apply
+
+
+def specialize_stencil(plan: Plan, shapes: dict, dtypes: dict,
+                       block_rows: int = 8, block_cols: int = 8,
+                       interpret: bool = True) -> StencilSpec:
+    """Build the static half of the blocked Pallas execution.
+
+    ``shapes`` maps env entry names to ``np.shape``-style tuples (``()`` for
+    scalars) and ``dtypes`` to their dtypes; together they are the
+    environment *signature* the spec is specialized against.  The grid tiles
+    level 1 by ``block_rows``; 3-D nests additionally tile level 2 by
+    ``block_cols`` (the innermost level always stays full-width)."""
     prog = plan.program
     m = prog.depth
     ranges = prog.ranges()
@@ -315,15 +388,21 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
                     f"{nm}: level-{l} halo {p[l - 1]} exceeds the input block "
                     f"size {coefs[nm][l] * blocks[l]}; raise {knob}")
 
-    scalar_names = sorted(nm for nm, v in env.items() if np.ndim(v) == 0)
-    base_names = sorted(perms)
-    out_names = [st.lhs.name for st in plan.body]
-    dt = jnp.result_type(*[env[nm] for nm in base_names])
+    scalar_names = tuple(sorted(
+        nm for nm, shp in shapes.items() if tuple(shp) == ()))
+    base_names = tuple(sorted(perms))
+    out_names = tuple(st.lhs.name for st in plan.body)
+    if not base_names:
+        raise ValueError(
+            "Pallas stencil path needs at least one array operand on a "
+            "right-hand side; this plan reads only scalars "
+            f"(env entries: {sorted(shapes)}) — run it on the XLA backend")
+    missing = [nm for nm in base_names if nm not in shapes]
+    if missing:
+        raise ValueError(f"environment is missing base arrays {missing}")
+    dt = jnp.result_type(*[np.dtype(dtypes[nm]) for nm in base_names])
 
-    # ---- prepare inputs: level-major layout + halo pad + block alignment --
-    scal = jnp.array([[env[nm] for nm in scalar_names]], dtype=dt) \
-        if scalar_names else jnp.zeros((1, 1), dt)
-    ins = [scal]
+    # ---- input geometry: level-major layout + halo pad + block alignment --
     in_specs = [pl.BlockSpec((1, max(len(scalar_names), 1)),
                              lambda *pids: (0, 0))]
 
@@ -336,10 +415,14 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
                 for l in covered)
         return imap
 
+    prep: dict = {}
     for nm in base_names:
-        arr = jnp.asarray(env[nm])
-        arr = jnp.transpose(arr, np.argsort(perms[nm])) \
-            if perms[nm] != tuple(range(arr.ndim)) else arr
+        shape = tuple(shapes[nm])
+        tperm = tuple(np.argsort(perms[nm]))
+        if tperm == tuple(range(len(shape))):
+            tperm = ()
+        else:
+            shape = tuple(shape[i] for i in tperm)
         covered = levels_of[nm]
         # per-axis (input coords): window start/length; zero-pad so every
         # slice is in bounds — cells fabricated from the zero pad only reach
@@ -358,13 +441,13 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
                 length = a * (extents[l - 1] - 1) + 2 * p + 1
                 block_shape.append(length)
             left = max(0, -start)
-            right = max(0, start + length - arr.shape[ax])
+            right = max(0, start + length - shape[ax])
             pads.append((left, right))
             sls.append(slice(start + left, start + left + length))
-        arr = jnp.pad(arr, pads)[tuple(sls)]
         blk = [l for l in covered if l in blocks]
+        n_copies = 3 ** len(blk)
+        prep[nm] = _ArrayPrep(tperm, tuple(pads), tuple(sls), n_copies)
         for ds in itertools.product((0, 1, 2), repeat=len(blk)):
-            ins.append(arr)
             in_specs.append(pl.BlockSpec(tuple(block_shape),
                                          _imap(covered, dict(zip(blk, ds)))))
 
@@ -376,24 +459,43 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
         l: 0 for l in grid_levels}))
         for _ in out_names]
 
+    out_axes = {}
+    for st in plan.body:
+        # transpose back from level-major to the output's own dim order:
+        # output dim d carries level lhs.subs[d].s -> take level-major axis s-1
+        axes = tuple(s.s - 1 for s in st.lhs.subs)
+        out_axes[st.lhs.name] = () if axes == tuple(range(m)) else axes
+
     kernel = _build_kernel(plan, ext, scalar_names, base_names, out_names,
                            blocks, extents, levels_of, coefs, pad_in)
-    outs = pl.pallas_call(
+    call = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
         interpret=interpret,
-    )(*ins)
+    )
+    return StencilSpec(plan=plan, scalar_names=scalar_names,
+                       base_names=base_names, out_names=out_names, dt=dt,
+                       prep=prep, extents=tuple(extents), out_axes=out_axes,
+                       interpret=interpret, _call=call)
 
-    result = {}
-    for nm, arr in zip(out_names, outs):
-        arr = arr[tuple(slice(0, e) for e in extents)]
-        # transpose back from level-major to the output's own dim order:
-        # output dim d carries level lhs.subs[d].s -> take level-major axis s-1
-        lhs = next(st.lhs for st in plan.body if st.lhs.name == nm)
-        axes = tuple(s.s - 1 for s in lhs.subs)
-        arr = jnp.transpose(arr, axes) if axes != tuple(range(m)) else arr
-        result[nm] = arr
-    return result
+
+def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
+                      block_cols: int = 8, interpret: bool = True):
+    """One-shot execution: specialize for ``env``'s signature, then apply.
+
+    env maps base array names -> arrays (laid out as in the program) and
+    scalar names -> scalars.  Returns {output name: interior array} shaped by
+    the statement ranges (level-major layout transposed back to each output's
+    own dim order).  Steady-state callers should go through
+    ``repro.core.executor``, which caches the specialization."""
+    from repro.core.executor import dtype_of
+
+    spec = specialize_stencil(
+        plan,
+        {nm: np.shape(v) for nm, v in env.items()},
+        {nm: dtype_of(v) for nm, v in env.items()},
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+    return spec.apply(env)

@@ -163,7 +163,9 @@ def _run_case_impl(case, reassociate_levels, backends, dtype, seed,
                                 n_aux=res.n_aux_materialized())
             try:
                 if backend == "xla":
-                    out = interior(res.plan, res.evaluator()(env))
+                    # through the compiled-executor cache: repeated sweeps of
+                    # structurally identical plans reuse the jitted evaluator
+                    out = res.run(env, "xla")
                     xla_out = out
                 else:
                     sel = select_backend(res.plan, "auto")
