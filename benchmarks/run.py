@@ -5,7 +5,9 @@
 Prints ``name,us_per_call,derived`` CSV per the harness convention.
 Sections: table1 (Table 1), speedup (Figs 7-8), scaling (Fig 9),
 memory (Fig 10), serving (PR-3 executor cache: cold vs steady-state µs/call,
-hit rate, batched throughput), roofline (EXPERIMENTS.md section Roofline;
+hit rate, batched throughput), tuning (ISSUE-4 autotuner: static default vs
+correctness-gated measured winner, search time, store round-trip),
+roofline (EXPERIMENTS.md section Roofline;
 reads the dry-run JSON and is skipped with a note if the dry-run has not
 been run).  Fig 11 (OpenMP thread scaling) has no analogue on this 1-core
 container; its distributed counterpart is the sharded dry-run — noted, not
@@ -62,7 +64,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     sections = []
-    from . import memory, scaling, serving, speedup, table1
+    from . import memory, scaling, serving, speedup, table1, tuning
 
     sections = [
         ("table1", lambda: table1.run()),
@@ -73,6 +75,8 @@ def main() -> None:
         ("memory", lambda: memory.run()),
         ("serving", lambda: serving.run(quick=args.quick,
                                         interpret=not args.compiled)),
+        ("tuning", lambda: tuning.run(quick=args.quick,
+                                      interpret=not args.compiled)),
     ]
     if args.from_frontend:
         from . import frontend

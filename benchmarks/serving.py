@@ -26,8 +26,9 @@ import jax
 
 from repro.apps.paper_kernels import get_case
 from repro.core.backend import select_backend
-from repro.core.executor import compile_plan, executor_cache
+from repro.core.executor import compile_plan, executor_cache, plan_hash
 from repro.core.race import race
+from repro.tuning.space import Config
 
 from .common import build_env, csv_line
 
@@ -37,7 +38,12 @@ CASES = [("calc_tpoints", 64), ("gaussian", 64), ("psinv", 16)]
 
 
 def _bench_backend(res, case, backend, repeats, batch, interpret,
-                   block_rows=8, block_cols=8):
+                   block_rows=8, block_cols=8, block_inner=0):
+    # the exact candidate config this row ran under: BENCH_serving.json
+    # entries stay comparable across PRs even once autotuning can move the
+    # default (serving rows always pin an explicit backend, never "auto")
+    config = Config(case.reassociate, backend, block_rows, block_cols,
+                    block_inner)
     cache = executor_cache()
     cache.clear()
     env = build_env(case)
@@ -72,6 +78,8 @@ def _bench_backend(res, case, backend, repeats, batch, interpret,
         batch_us_per_item=t_batch / batch * 1e6,
         batch_ips=batch / max(t_batch, 1e-12),
         cache_entries=len(cache),
+        config=dict(config.as_dict(), interpret=interpret,
+                    plan=plan_hash(res.plan)),
     )
 
 
@@ -97,7 +105,8 @@ def run(print_fn=print, quick: bool = False, repeats: int = None,
                        f";retraces={row['retraces']}"
                        f";batch{batch}_us_per_item="
                        f"{row['batch_us_per_item']:.1f}"
-                       f";batch_ips={row['batch_ips']:.0f}")
+                       f";batch_ips={row['batch_ips']:.0f}"
+                       f";cfg={Config.from_dict(row['config']).describe()}")
             print_fn(csv_line(f"serving.{name}.{backend}",
                               row["us_per_call"], derived))
             rows.append(row)

@@ -34,6 +34,7 @@ tracing) stays at 1; tests assert this on both backends.
 from __future__ import annotations
 
 import hashlib
+import os
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -45,9 +46,39 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from .backend import Selection, select_backend
+from .backend import BACKENDS, Selection, select_backend
 from .depgraph import Plan
-from .ir import Const, Expr, FuncName, Node, Ref
+from .ir import Const, Expr, FuncName, Node, Program, Ref
+
+#: env knobs for the serving layer (documented in README):
+#:   RACE_EXECUTOR_CACHE_SIZE — LRU capacity of the process-wide cache;
+#:   RACE_BACKEND             — default backend when a caller doesn't pick one.
+ENV_CACHE_SIZE = "RACE_EXECUTOR_CACHE_SIZE"
+ENV_BACKEND = "RACE_BACKEND"
+
+
+def _env_cache_size(default: int = 128) -> int:
+    raw = os.environ.get(ENV_CACHE_SIZE, "").strip()
+    if not raw:
+        return default
+    try:
+        size = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"{ENV_CACHE_SIZE}={raw!r} is not an integer") from None
+    if size < 1:
+        raise ValueError(f"{ENV_CACHE_SIZE} must be >= 1, got {size}")
+    return size
+
+
+def default_backend() -> str:
+    """The backend used when no caller picks one: ``$RACE_BACKEND`` or
+    ``"auto"``.  An unknown value raises rather than silently degrading."""
+    b = os.environ.get(ENV_BACKEND, "").strip() or "auto"
+    if b not in BACKENDS:
+        raise ValueError(
+            f"{ENV_BACKEND}={b!r} is not one of {BACKENDS}")
+    return b
 
 # ---------------------------------------------------------------------------
 # canonical structural hash over plans
@@ -97,6 +128,29 @@ def plan_hash(plan: Plan) -> str:
         h = hashlib.sha256(
             repr(plan_fingerprint(plan)).encode()).hexdigest()[:16]
         plan._structural_hash = h
+    return h
+
+
+def program_fingerprint(prog: Program) -> tuple:
+    """Canonical serialization of an *untransformed* program: loop levels and
+    ranges plus the statement expressions, loop variable names excluded.
+    This is the identity the autotuner keys on — it must be stable *before*
+    any reassociation level is chosen, since the level is one of the knobs
+    being tuned (``plan_fingerprint`` already bakes the chosen plan in)."""
+    return (
+        "race-program-v1",
+        tuple((l.level, l.lo, l.hi) for l in prog.loops),
+        tuple((_tok(st.lhs), _tok(st.rhs)) for st in prog.body),
+    )
+
+
+def program_hash(prog: Program) -> str:
+    """16-hex-digit structural hash of a program, memoized on the instance."""
+    h = getattr(prog, "_structural_hash", None)
+    if h is None:
+        h = hashlib.sha256(
+            repr(program_fingerprint(prog)).encode()).hexdigest()[:16]
+        object.__setattr__(prog, "_structural_hash", h)
     return h
 
 
@@ -156,7 +210,8 @@ class ExecutorKey:
     plan: str  # structural plan hash
     env: tuple  # env_signature
     backend: str  # resolved: "xla" | "pallas"
-    blocks: Optional[tuple]  # (block_rows, block_cols, interpret) | None (xla)
+    #: (block_rows, block_cols, block_inner, interpret) | None (xla)
+    blocks: Optional[tuple]
     donate: bool
 
 
@@ -176,13 +231,15 @@ class CompiledRace:
 
     def __init__(self, plan: Plan, env_sig: tuple, selection: Selection, *,
                  block_rows: int = 8, block_cols: int = 8,
-                 interpret: bool = True, donate: bool = False):
+                 block_inner: int = 0, interpret: bool = True,
+                 donate: bool = False):
         self.plan = plan
         self.env_sig = env_sig
         self.selection = selection
         self.backend = selection.backend
         self.block_rows = block_rows
         self.block_cols = block_cols
+        self.block_inner = block_inner
         self.interpret = interpret
         self.donate = donate
         self.calls = 0
@@ -201,7 +258,7 @@ class CompiledRace:
                 {nm: shp for nm, shp, *_ in env_sig},
                 {nm: np.dtype(dt) for nm, _, dt, *_ in env_sig},
                 block_rows=block_rows, block_cols=block_cols,
-                interpret=interpret)
+                interpret=interpret, block_inner=block_inner)
             core = self.spec.apply
         else:
             from repro.kernels.ref import interior
@@ -312,7 +369,9 @@ class ExecutorCache:
     one miss and one executor per key under concurrent first calls.
     """
 
-    def __init__(self, maxsize: int = 128):
+    def __init__(self, maxsize: Optional[int] = None):
+        if maxsize is None:  # the documented env knob
+            maxsize = _env_cache_size()
         self.maxsize = maxsize
         self._entries: OrderedDict = OrderedDict()
         self._lock = threading.Lock()
@@ -347,6 +406,12 @@ class ExecutorCache:
     def keys(self) -> list:
         with self._lock:
             return list(self._entries)
+
+    def cache_info(self) -> dict:
+        """Stats plus the configured capacity (``RACE_EXECUTOR_CACHE_SIZE``)."""
+        with self._lock:
+            return dict(maxsize=self.maxsize, currsize=len(self._entries),
+                        **self.stats.snapshot())
 
 
 _CACHE = ExecutorCache()
@@ -390,30 +455,82 @@ def _resolve(plan: Plan, backend: str) -> Selection:
     return sel
 
 
+def _tuned_choice(plan: Plan, sig: tuple) -> Optional[dict]:
+    """Consult the persistent autotuning store (``repro.tuning``) for this
+    (plan, env signature) on this device/jax version.  Returns the recorded
+    choice dict, or None — and *never* raises: a corrupt or stale store must
+    degrade to the static default, not take the serving path down.
+
+    Runs on every ``backend="auto"`` call — i.e. on the steady-state serving
+    path — so the expensive key construction (JSON of the env signature plus
+    the runtime fence) is memoized per plan instance; what remains per call
+    is one ``os.stat`` freshness check inside the store, which keeps
+    cross-process pickups live without re-reading anything."""
+    try:
+        from repro.tuning.store import plan_choice, record_key
+
+        memo = getattr(plan, "_tuning_key_memo", None)
+        if memo is None:
+            memo = plan._tuning_key_memo = {}
+        key = memo.get(sig)
+        if key is None:
+            key = memo[sig] = record_key("plan", plan_hash(plan), sig)
+        choice = plan_choice(key)
+        if not isinstance(choice, dict):
+            return None
+        if choice.get("backend") == "xla":
+            return choice
+        if (choice.get("backend") == "pallas"
+                and _resolve(plan, "auto").backend == "pallas"):
+            return choice
+    except Exception:
+        pass
+    return None
+
+
 def compile_plan(plan: Plan, env: Union[Mapping, tuple],
-                 backend: str = "auto", *, block_rows: int = 8,
-                 block_cols: int = 8, interpret: bool = True,
-                 donate: Optional[bool] = None,
+                 backend: Optional[str] = None, *, block_rows: int = 8,
+                 block_cols: int = 8, block_inner: int = 0,
+                 interpret: bool = True, donate: Optional[bool] = None,
                  cache: Optional[ExecutorCache] = None) -> CompiledRace:
     """Fetch (or build) the compiled executor for this (plan, env) pairing.
 
     ``env`` is either an environment mapping or a precomputed
-    :func:`env_signature`.  ``donate=True`` opts into ``donate_argnums``
-    output-buffer reuse on accelerator backends: env entries named like plan
-    outputs are *consumed* by every call, so the caller must re-supply fresh
-    buffers each time — hence off by default (and forced off on CPU, which
-    ignores donation and would warn per call).
+    :func:`env_signature`.  ``backend=None`` resolves to ``$RACE_BACKEND``
+    (default ``"auto"``).  The ``"auto"`` path consults the persistent
+    autotuning store (:mod:`repro.tuning`) first: a correctness-gated,
+    measured winner recorded for this exact (plan hash, env signature,
+    device, jax version) — by this or *any earlier process* — supplies the
+    backend and block config with zero re-measurement; otherwise the
+    capability probe picks as before.  Explicit ``"xla"``/``"pallas"``
+    requests bypass the store (that's how the tuner itself measures).
+
+    ``donate=True`` opts into ``donate_argnums`` output-buffer reuse on
+    accelerator backends: env entries named like plan outputs are *consumed*
+    by every call, so the caller must re-supply fresh buffers each time —
+    hence off by default (and forced off on CPU, which ignores donation and
+    would warn per call).
     """
     sig = env if isinstance(env, tuple) else env_signature(env)
+    if backend is None:
+        backend = default_backend()
+    if backend == "auto":
+        choice = _tuned_choice(plan, sig)
+        if choice is not None:
+            backend = choice["backend"]
+            if backend == "pallas":
+                block_rows = int(choice.get("block_rows", block_rows))
+                block_cols = int(choice.get("block_cols", block_cols))
+                block_inner = int(choice.get("block_inner", block_inner))
     sel = _resolve(plan, backend)
     if donate is None:
         donate = False
     elif donate and jax.default_backend() in ("cpu",):
         donate = False
-    blocks = ((block_rows, block_cols, bool(interpret))
+    blocks = ((block_rows, block_cols, block_inner, bool(interpret))
               if sel.backend == "pallas" else None)
     key = ExecutorKey(plan_hash(plan), sig, sel.backend, blocks, bool(donate))
     c = cache if cache is not None else _CACHE
     return c.get_or_build(key, lambda: CompiledRace(
         plan, sig, sel, block_rows=block_rows, block_cols=block_cols,
-        interpret=interpret, donate=bool(donate)))
+        block_inner=block_inner, interpret=interpret, donate=bool(donate)))

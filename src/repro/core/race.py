@@ -33,6 +33,8 @@ class RaceResult:
     plan: Plan
     transformed: Transformed
     options: dict
+    # per-env-signature tuned delegation: sig -> (TuningDecision, RaceResult)
+    _tuned: dict = field(default_factory=dict, repr=False)
 
     # --- analysis ----------------------------------------------------------
     def profit(self):
@@ -73,15 +75,68 @@ class RaceResult:
         """Resolve a backend request (default: the one given to ``race``)."""
         return select_backend(self.plan, backend or self.options.get("backend", "auto"))
 
+    def tune(self, env: dict, **autotune_kw):
+        """Measure-and-pick the best (reassociate, backend, blocks) for
+        ``env`` via :func:`repro.tuning.autotune` (or the persistent store,
+        when this machine already tuned this program + signature).
+
+        The decision is remembered on this result: later :meth:`run` /
+        :meth:`run_batch` calls with the same env signature and no explicit
+        backend execute the winner — including a different reassociation
+        level's plan when that measured faster.  Returns the
+        :class:`~repro.tuning.TuningDecision`.
+        """
+        from repro.tuning import autotune
+
+        from .executor import env_signature
+
+        opts = self.options
+        # rebuild each level with the same plan-shaping knobs as this result,
+        # so the plans the tuner measures are the plans run() will execute
+        race_opts = {k: opts[k]
+                     for k in ("esr", "contraction", "cost_model",
+                               "rewrite_sub", "max_rounds",
+                               "mis_exact_limit")
+                     if k in opts}
+        kw = dict(autotune_kw)
+        kw.setdefault("default_reassociate", opts.get("reassociate", 0))
+        kw.setdefault("rewrite_div", opts.get("rewrite_div", False))
+        kw.setdefault("race_opts", race_opts)
+        dec = autotune(self.program, env, **kw)
+        ch = dec.choice
+        if ch.reassociate == opts.get("reassociate", 0):
+            target = self
+        else:
+            target = race(self.program, reassociate=ch.reassociate,
+                          rewrite_div=opts.get("rewrite_div", False),
+                          backend=opts.get("backend"), **race_opts)
+        self._tuned[env_signature(env)] = (dec, target)
+        return dec
+
+    def _tuned_entry(self, env, sig):
+        """(decision, target result) for sig, auto-tuning when requested."""
+        from .executor import env_signature
+
+        entry = self._tuned.get(sig)
+        if entry is None and self.options.get("tune") is not None:
+            # race(tune=True) stores {}; race(tune={...}) forwards the kwargs
+            self.tune(dict(env), **self.options["tune"])
+            entry = self._tuned.get(sig) or self._tuned.get(
+                env_signature(env))
+            if entry is not None:  # normalization drift (e.g. weak types
+                self._tuned[sig] = entry  # sliced out of a stacked batch)
+        return entry
+
     def run(self, env: dict, backend: Optional[str] = None, *,
-            block_rows: int = 8, block_cols: int = 8, interpret: bool = True,
-            donate: Optional[bool] = None):
+            block_rows: int = 8, block_cols: int = 8, block_inner: int = 0,
+            interpret: bool = True, donate: Optional[bool] = None):
         """Execute the plan on the selected backend.
 
         Both backends return the *interior* convention — ``{output name:
         array over the statement ranges}`` — so results are directly
         comparable across backends.  ``backend=None`` uses the request
-        recorded by :func:`race` (``"auto"`` prefers Pallas when eligible).
+        recorded by :func:`race` (``"auto"`` prefers Pallas when eligible,
+        after consulting the persistent autotuning store).
 
         Execution goes through the plan-keyed compiled-executor cache
         (:mod:`repro.core.executor`): the first call per (plan structure,
@@ -89,37 +144,73 @@ class RaceResult:
         later same-signature call — including calls on a *different*
         ``RaceResult`` holding a structurally identical plan — reuses the
         compiled executor with zero retracing.
-        """
-        from .executor import compile_plan
 
+        With ``race(..., tune=True)`` (or after an explicit :meth:`tune`),
+        calls without an explicit ``backend`` run the tuned winner for the
+        env's signature; the first such call pays the search unless the
+        persistent store already has the decision.
+        """
+        from .executor import compile_plan, env_signature
+
+        if backend is None and (self._tuned
+                                or self.options.get("tune") is not None):
+            entry = self._tuned_entry(env, env_signature(env))
+            if entry is not None:
+                dec, target = entry
+                ch = dec.choice
+                ex = compile_plan(
+                    target.plan, env, ch.backend, block_rows=ch.block_rows,
+                    block_cols=ch.block_cols, block_inner=ch.block_inner,
+                    interpret=interpret, donate=donate)
+                return ex(env)
         ex = compile_plan(
             self.plan, env, backend or self.options.get("backend", "auto"),
             block_rows=block_rows, block_cols=block_cols,
-            interpret=interpret, donate=donate)
+            block_inner=block_inner, interpret=interpret, donate=donate)
         return ex(env)
 
     def run_batch(self, envs, backend: Optional[str] = None, *,
                   block_rows: int = 8, block_cols: int = 8,
-                  interpret: bool = True, donate: Optional[bool] = None):
+                  block_inner: int = 0, interpret: bool = True,
+                  donate: Optional[bool] = None):
         """Batched execution: one compiled executor vmapped over ``envs``.
 
         ``envs`` is a sequence of same-signature environments, or an
         already-stacked env dict whose every entry carries a leading batch
         axis (scalars as ``(B,)`` arrays).  Returns ``{output name: (B, ...)
-        array}`` with ``out[name][b] == run(envs[b])[name]``.
+        array}`` with ``out[name][b] == run(envs[b])[name]``.  A tuned
+        decision for the per-example signature (see :meth:`tune`) is applied
+        the same way as in :meth:`run`.
         """
         from .executor import compile_plan, env_signature, stacked_signature
 
+        import numpy as _np
+
         if isinstance(envs, dict):
             sig = stacked_signature(envs)
+            # per-example env (batch element 0) for a possible tune trigger
+            example = {k: _np.asarray(v)[0] for k, v in envs.items()}
         else:
             envs = list(envs)
             if not envs:
                 raise ValueError("run_batch needs at least one env")
             sig = env_signature(envs[0])
+            example = envs[0]
+        if backend is None and (self._tuned
+                                or self.options.get("tune") is not None):
+            entry = self._tuned_entry(example, sig)
+            if entry is not None:
+                dec, target = entry
+                ch = dec.choice
+                ex = compile_plan(
+                    target.plan, sig, ch.backend, block_rows=ch.block_rows,
+                    block_cols=ch.block_cols, block_inner=ch.block_inner,
+                    interpret=interpret, donate=donate)
+                return ex.run_batch(envs)
         ex = compile_plan(
             self.plan, sig, backend or self.options.get("backend", "auto"),
-            block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+            block_rows=block_rows, block_cols=block_cols,
+            block_inner=block_inner, interpret=interpret,
             donate=donate)
         return ex.run_batch(envs)
 
@@ -155,7 +246,8 @@ def race(
     rewrite_div: bool = False,
     max_rounds: int = 64,
     mis_exact_limit: int = 40,
-    backend: str = "auto",
+    backend: Optional[str] = None,
+    tune=False,
 ) -> RaceResult:
     """Run RACE on a program.  See module docstring for knobs.
 
@@ -163,9 +255,21 @@ def race(
     :meth:`RaceResult.run`: ``"xla"`` (whole-array evaluator), ``"pallas"``
     (blocked TPU kernel; raises ``BackendUnavailable`` at run/selection time
     when the plan is ineligible), or ``"auto"`` (Pallas when the capability
-    probe passes, XLA otherwise — never silently: the Selection carries the
-    fallback reasons).
+    probe passes — after consulting the persistent autotuning store — XLA
+    otherwise, never silently: the Selection carries the fallback reasons).
+    ``backend=None`` resolves to ``$RACE_BACKEND`` or ``"auto"``.
+
+    ``tune=True`` defers the strategy/backend/block choice to the autotuner
+    (:mod:`repro.tuning`): the first :meth:`RaceResult.run` per env
+    signature measures the candidate space (or answers from the persistent
+    store) and every later call runs the winner.  Pass a dict instead of
+    True to forward keyword options to :func:`repro.tuning.autotune`,
+    e.g. ``tune=dict(levels=(0, 3), backends=("xla",))``.
     """
+    if backend is None:
+        from .executor import default_backend
+
+        backend = default_backend()
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
     if reassociate and esr:
@@ -201,6 +305,15 @@ def race(
             esr=esr,
             contraction=contraction,
             backend=backend,
+            rewrite_div=rewrite_div,
+            # plan-shaping knobs, recorded so RaceResult.tune() measures
+            # plans built with *these* options, not the defaults
+            cost_model=cost_model,
+            rewrite_sub=rewrite_sub,
+            max_rounds=max_rounds,
+            mis_exact_limit=mis_exact_limit,
+            tune=(dict(tune) if isinstance(tune, dict)
+                  else {} if tune else None),
         ),
     )
 

@@ -20,6 +20,13 @@ through the plan-keyed compiled-executor cache (:mod:`repro.core.executor`),
 so repeated ``run``/``run_batch`` calls also pay trace + compile + host-side
 prep exactly once per signature — steady-state serving stays on a fully
 compiled path.
+
+``@race_kernel(tune=True)`` additionally routes the strategy / backend /
+block-config choice through the persistent autotuner (:mod:`repro.tuning`):
+the first ``run`` per input signature measures the candidate space — or
+answers from the on-disk store when this machine tuned the kernel before —
+and every later call executes the recorded winner.  Pass a dict to forward
+options, e.g. ``@race_kernel(tune=dict(levels=(0, 3)))``.
 """
 from __future__ import annotations
 
@@ -34,8 +41,14 @@ from .diagnostics import CaptureError  # noqa: F401 - re-export convenience
 
 
 def _freeze(mapping: Optional[Mapping]) -> tuple:
-    return tuple(sorted((k, tuple(v) if isinstance(v, (tuple, list)) else v)
-                        for k, v in (mapping or {}).items()))
+    def fz(v):
+        if isinstance(v, (tuple, list)):
+            return tuple(fz(x) for x in v)
+        if isinstance(v, dict):  # e.g. tune=dict(levels=(0, 3))
+            return tuple(sorted((k, fz(x)) for k, x in v.items()))
+        return v
+
+    return tuple(sorted((k, fz(v)) for k, v in (mapping or {}).items()))
 
 
 class RaceKernel:
@@ -134,7 +147,8 @@ class RaceKernel:
 def race_kernel(fn: Optional[Callable] = None, **race_opts):
     """Decorator form of the frontend; bare or parametrized.
 
-    ``@race_kernel`` / ``@race_kernel(reassociate=4, backend="pallas")``.
+    ``@race_kernel`` / ``@race_kernel(reassociate=4, backend="pallas")`` /
+    ``@race_kernel(tune=True)`` (autotuned strategy + backend + blocks).
     Keyword options forward to :func:`repro.core.race.race`.
     """
     if fn is None:

@@ -357,14 +357,18 @@ class StencilSpec:
 
 def specialize_stencil(plan: Plan, shapes: dict, dtypes: dict,
                        block_rows: int = 8, block_cols: int = 8,
-                       interpret: bool = True) -> StencilSpec:
+                       interpret: bool = True,
+                       block_inner: int = 0) -> StencilSpec:
     """Build the static half of the blocked Pallas execution.
 
     ``shapes`` maps env entry names to ``np.shape``-style tuples (``()`` for
     scalars) and ``dtypes`` to their dtypes; together they are the
     environment *signature* the spec is specialized against.  The grid tiles
     level 1 by ``block_rows``; 3-D nests additionally tile level 2 by
-    ``block_cols`` (the innermost level always stays full-width)."""
+    ``block_cols``.  The innermost level stays full-width by default (VPU
+    lanes); ``block_inner > 0`` grid-tiles it too — for very wide rows whose
+    full-width blocks would not fit VMEM — at the cost of a halo copy along
+    the innermost axis."""
     prog = plan.program
     m = prog.depth
     ranges = prog.ranges()
@@ -375,6 +379,8 @@ def specialize_stencil(plan: Plan, shapes: dict, dtypes: dict,
     blocks = {1: block_rows}
     if m >= 3:
         blocks[2] = block_cols
+    if block_inner:
+        blocks[m] = block_inner
     grid_levels = sorted(blocks)
     nb = {l: -(-extents[l - 1] // blocks[l]) for l in grid_levels}
     grid = tuple(nb[l] for l in grid_levels)
@@ -383,7 +389,9 @@ def specialize_stencil(plan: Plan, shapes: dict, dtypes: dict,
     for nm, p in pad_in.items():
         for l in grid_levels:
             if l in levels_of[nm] and p[l - 1] > coefs[nm][l] * blocks[l]:
-                knob = "block_rows" if l == 1 else "block_cols"
+                knob = ("block_rows" if l == 1 else
+                        "block_inner" if l == m and block_inner else
+                        "block_cols")
                 raise ValueError(
                     f"{nm}: level-{l} halo {p[l - 1]} exceeds the input block "
                     f"size {coefs[nm][l] * blocks[l]}; raise {knob}")
@@ -483,7 +491,8 @@ def specialize_stencil(plan: Plan, shapes: dict, dtypes: dict,
 
 
 def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
-                      block_cols: int = 8, interpret: bool = True):
+                      block_cols: int = 8, interpret: bool = True,
+                      block_inner: int = 0):
     """One-shot execution: specialize for ``env``'s signature, then apply.
 
     env maps base array names -> arrays (laid out as in the program) and
@@ -497,5 +506,6 @@ def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
         plan,
         {nm: np.shape(v) for nm, v in env.items()},
         {nm: dtype_of(v) for nm, v in env.items()},
-        block_rows=block_rows, block_cols=block_cols, interpret=interpret)
+        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
+        block_inner=block_inner)
     return spec.apply(env)

@@ -110,7 +110,9 @@ class CaseReport:
         return any(c.backend == "pallas" and c.ok for c in self.combos)
 
 
-def _rel_err(got: dict, want: dict) -> float:
+def rel_err(got: dict, want: dict) -> float:
+    """Worst relative error across outputs — the harness's single metric,
+    shared by the autotuner's correctness gate (``repro.tuning.measure``)."""
     worst = 0.0
     for k in want:
         g = np.asarray(got[k], np.float64)
@@ -120,10 +122,14 @@ def _rel_err(got: dict, want: dict) -> float:
     return worst
 
 
+_rel_err = rel_err
+
+
 def run_case(case, reassociate_levels: Iterable[int] = (0, 3, 4),
              backends: Iterable[str] = ("xla", "pallas"),
              dtype=np.float32, seed: int = 0, block_rows: int = 8,
-             block_cols: int = 8, tolerances: Optional[dict] = None,
+             block_cols: int = 8, block_inner: int = 0,
+             tolerances: Optional[dict] = None,
              interpret: bool = True) -> CaseReport:
     """Differential-verify one case across plans and backends."""
     import contextlib
@@ -143,11 +149,13 @@ def run_case(case, reassociate_levels: Iterable[int] = (0, 3, 4),
         ctx = contextlib.nullcontext()
     with ctx:
         return _run_case_impl(case, reassociate_levels, backends, dtype, seed,
-                              block_rows, block_cols, tol, interpret)
+                              block_rows, block_cols, block_inner, tol,
+                              interpret)
 
 
 def _run_case_impl(case, reassociate_levels, backends, dtype, seed,
-                   block_rows, block_cols, tol, interpret) -> CaseReport:
+                   block_rows, block_cols, block_inner, tol,
+                   interpret) -> CaseReport:
     env = build_env(case, dtype=dtype, seed=seed)
     report = CaseReport(case.name)
 
@@ -175,7 +183,9 @@ def _run_case_impl(case, reassociate_levels, backends, dtype, seed,
                         report.combos.append(combo)
                         continue
                     out = res.run(env, "pallas", block_rows=block_rows,
-                                  block_cols=block_cols, interpret=interpret)
+                                  block_cols=block_cols,
+                                  block_inner=block_inner,
+                                  interpret=interpret)
                 combo.max_rel_err = _rel_err(out, truth)
                 if combo.max_rel_err > tol["baseline"]:
                     combo.status = "mismatch"

@@ -1,0 +1,38 @@
+"""``repro.tuning`` — persistent, correctness-gated autotuning (ISSUE 4).
+
+The paper leaves its biggest knobs open at apply time: the reassociation
+strategy (Section 7), and — in this port — the execution backend and the
+Pallas block configuration.  This subsystem decides them *empirically*:
+
+    space.py    candidate enumeration (levels x backends x block grid)
+    measure.py  warmup+repeats timing through the compiled-executor path,
+                correctness-gated against the reassociate=0 XLA baseline
+    store.py    schema-versioned JSON-lines persistence (atomic + locked
+                writes) keyed by (hash, env signature, device, jax version)
+    tuner.py    the ``autotune(program, env)`` front door
+
+Entry points, lowest to highest level::
+
+    dec = autotune(prog, env)                 # measure (or store-hit) + pick
+    res = race(prog, tune=True); res.run(env) # tune on first run
+    res.tune(env)                             # tune an existing RaceResult
+    @race_kernel(tune=True)                   # the frontend decorator
+
+and — the payoff — ``compile_plan(..., backend="auto")`` consults the store
+directly, so a decision tuned in one process is reused by every later
+process with zero re-measurement.
+"""
+from .measure import Measurement, measure_candidate, time_executor
+from .space import REASSOCIATE_LEVELS, Config, block_grid, candidate_configs
+from .store import (ENV_STORE, SCHEMA_VERSION, TuningStore, default_store,
+                    plan_choice, program_record, record_key, runtime_fence,
+                    sig_json, store_file)
+from .tuner import TuningDecision, autotune
+
+__all__ = [
+    "autotune", "TuningDecision", "Config", "Measurement", "TuningStore",
+    "candidate_configs", "block_grid", "measure_candidate", "time_executor",
+    "default_store", "store_file", "plan_choice", "program_record",
+    "record_key", "runtime_fence", "sig_json", "REASSOCIATE_LEVELS",
+    "SCHEMA_VERSION", "ENV_STORE",
+]

@@ -1,0 +1,88 @@
+"""Correctness-gated measurement of one tuning candidate.
+
+Every candidate runs through the *same* plan-keyed compiled-executor path
+that serves production traffic (``repro.core.executor.compile_plan`` with an
+explicit backend — never ``"auto"``, which would consult the store the tuner
+is about to write).  A candidate must first reproduce the ``reassociate=0``
+XLA baseline within the differential-harness tolerance for its dtype; only
+then is it timed (warmup + repeats, median wall time).  Gated or erroring
+candidates are recorded with their reason, never silently dropped.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Mapping, Optional
+
+import numpy as np
+
+import jax
+
+from repro.core.depgraph import Plan
+from repro.core.executor import compile_plan
+# the gate uses the differential harness's own error metric, not a copy
+from repro.testing.differential import rel_err
+
+from .space import Config
+
+
+@dataclass
+class Measurement:
+    """One candidate's fate: timed, correctness-gated, or errored."""
+
+    config: Config
+    status: str  # "ok" | "gated" | "error"
+    us: Optional[float] = None  # median steady-state wall time, µs
+    rel_err: Optional[float] = None  # vs the reassociate=0 XLA baseline
+    detail: str = ""
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    def as_dict(self) -> dict:
+        return dict(config=self.config.as_dict(), status=self.status,
+                    us=self.us, rel_err=self.rel_err, detail=self.detail)
+
+
+def time_executor(ex, env: Mapping, repeats: int = 5,
+                  warmup: int = 2) -> float:
+    """Median wall time of an already-built executor, microseconds."""
+    out = None
+    for _ in range(max(warmup, 1)):
+        out = ex(env)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(ex(env))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def measure_candidate(plan: Plan, config: Config, env: Mapping,
+                      truth: Mapping, tolerance: float, *,
+                      repeats: int = 5, warmup: int = 2,
+                      interpret: bool = True) -> Measurement:
+    """Gate then time one candidate; exceptions become ``status="error"``.
+
+    Infeasible configs (e.g. a halo larger than the requested input block)
+    raise inside specialization and are reported here as errors — the tuner
+    treats them as non-candidates rather than crashing the search.
+    """
+    try:
+        ex = compile_plan(
+            plan, env, config.backend, block_rows=config.block_rows,
+            block_cols=config.block_cols, block_inner=config.block_inner,
+            interpret=interpret)
+        out = ex(env)
+        err = rel_err(out, truth)
+        if err > tolerance:
+            return Measurement(
+                config, "gated", rel_err=err,
+                detail=f"vs r0/xla baseline: {err:.2e} > {tolerance:.0e}")
+        us = time_executor(ex, env, repeats=repeats, warmup=warmup)
+        return Measurement(config, "ok", us=us, rel_err=err)
+    except Exception as e:  # noqa: BLE001 - reported, not swallowed
+        return Measurement(config, "error",
+                           detail=f"{type(e).__name__}: {e}")

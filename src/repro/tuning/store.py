@@ -1,0 +1,235 @@
+"""Persistent, crash-safe store of autotuning decisions.
+
+One JSON-lines file — ``$RACE_TUNING_CACHE`` (a directory, or a ``*.jsonl``
+file path) or ``~/.cache/repro-race/tuning.jsonl`` — holds one record per
+line.  Records are keyed by
+
+    (kind, structural hash, env signature, device kind, jax version)
+
+where ``kind`` is ``"program"`` (the tuner's full decision, reassociation
+level included) or ``"plan"`` (backend + block config for one already-chosen
+plan — what ``compile_plan(..., backend="auto")`` consults), the structural
+hash is :func:`repro.core.executor.program_hash` / ``plan_hash``, and device
+kind + jax version fence records to the hardware/runtime they were measured
+on.
+
+Durability contract (pinned by tests):
+
+  * writes are *atomic renames* — readers never observe a truncated file —
+    and serialized by an advisory ``flock`` on a sidecar lock file, so two
+    concurrent writers merge rather than lose records;
+  * loading is fully tolerant: corrupt or truncated lines, wrong-schema
+    records, and unreadable files all degrade to "no record" (the tuner
+    simply re-measures); the store never raises on bad input;
+  * every record carries ``schema``; bumping :data:`SCHEMA_VERSION`
+    invalidates old records without needing a migration.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import threading
+from pathlib import Path
+from typing import Mapping, Optional
+
+SCHEMA_VERSION = 1
+
+ENV_STORE = "RACE_TUNING_CACHE"
+
+try:  # POSIX advisory locking; harmlessly absent elsewhere
+    import fcntl
+except ImportError:  # pragma: no cover - non-POSIX fallback
+    fcntl = None
+
+
+def store_file() -> Path:
+    """Resolve the store path from ``$RACE_TUNING_CACHE`` (file or dir)."""
+    raw = os.environ.get(ENV_STORE, "").strip()
+    if raw:
+        p = Path(raw).expanduser()
+        return p if p.suffix == ".jsonl" else p / "tuning.jsonl"
+    return Path.home() / ".cache" / "repro-race" / "tuning.jsonl"
+
+
+_fence = None
+
+
+def runtime_fence() -> dict:
+    """Device kind + jax version: records never cross either boundary.
+    Memoized — neither changes within a process, and the serving path asks
+    on every ``backend="auto"`` compile."""
+    global _fence
+    if _fence is None:
+        import jax
+
+        _fence = dict(device=jax.default_backend(), jax=jax.__version__)
+    return _fence
+
+
+def sig_json(sig: tuple) -> str:
+    """Canonical JSON of an env signature (the executor-layer tuple form)."""
+    return json.dumps(
+        [[nm, list(shape), str(dt), bool(weak)]
+         for nm, shape, dt, weak in sig],
+        separators=(",", ":"))
+
+
+def record_key(kind: str, struct_hash: str, sig: tuple,
+               fence: Optional[Mapping] = None) -> str:
+    f = fence or runtime_fence()
+    return "|".join((kind, struct_hash, sig_json(sig),
+                     str(f["device"]), str(f["jax"])))
+
+
+class TuningStore:
+    """Mtime-checked in-memory view over one JSON-lines store file."""
+
+    def __init__(self, path):
+        self.path = Path(path)
+        self._records: dict = {}
+        self._stamp = object()  # never equals a real stat, forces first load
+        self._lock = threading.Lock()
+
+    # -- loading ------------------------------------------------------------
+
+    def _stat(self):
+        try:
+            st = os.stat(self.path)
+            return (st.st_mtime_ns, st.st_size)
+        except OSError:
+            return None
+
+    def _load(self, stamp) -> None:
+        records: dict = {}
+        try:
+            text = self.path.read_bytes().decode("utf-8", errors="replace")
+        except OSError:
+            text = ""
+        for line in text.splitlines():
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except ValueError:
+                continue  # corrupt / truncated line: skip, never crash
+            if (not isinstance(rec, dict)
+                    or rec.get("schema") != SCHEMA_VERSION
+                    or not isinstance(rec.get("key"), str)):
+                continue  # wrong schema version (or malformed): ignored
+            records[rec["key"]] = rec  # later lines win
+        self._records = records
+        self._stamp = stamp
+
+    def _maybe_reload(self) -> None:
+        stamp = self._stat()
+        if stamp != self._stamp:
+            with self._lock:
+                if stamp != self._stamp:
+                    self._load(stamp)
+
+    # -- read ---------------------------------------------------------------
+
+    def get(self, key: str) -> Optional[dict]:
+        self._maybe_reload()
+        return self._records.get(key)
+
+    def __len__(self) -> int:
+        self._maybe_reload()
+        return len(self._records)
+
+    def keys(self) -> list:
+        self._maybe_reload()
+        return list(self._records)
+
+    # -- write --------------------------------------------------------------
+
+    def put(self, record: Mapping) -> None:
+        """Merge one record (by its ``key``) and atomically rewrite the file.
+
+        Read-merge-replace under an advisory file lock: concurrent writers
+        from any number of processes serialize on the lock, each re-reads
+        the latest on-disk state before rewriting, so no record is lost; the
+        ``os.replace`` keeps every intermediate state a complete, valid
+        JSON-lines file.
+        """
+        rec = dict(record)
+        rec["schema"] = SCHEMA_VERSION
+        if not isinstance(rec.get("key"), str):
+            raise ValueError("tuning record needs a string 'key'")
+        self.path.parent.mkdir(parents=True, exist_ok=True)
+        lock_path = str(self.path) + ".lock"
+        with open(lock_path, "w") as lf:
+            if fcntl is not None:
+                fcntl.flock(lf, fcntl.LOCK_EX)
+            try:
+                with self._lock:
+                    self._load(self._stat())  # merge latest on-disk state
+                    merged = dict(self._records)
+                    merged[rec["key"]] = rec
+                    fd, tmp = tempfile.mkstemp(
+                        dir=str(self.path.parent),
+                        prefix=self.path.name + ".", suffix=".tmp")
+                    try:
+                        with os.fdopen(fd, "w") as f:
+                            for r in merged.values():
+                                f.write(json.dumps(r, separators=(",", ":"))
+                                        + "\n")
+                            f.flush()
+                            os.fsync(f.fileno())
+                        os.replace(tmp, self.path)
+                    except BaseException:
+                        try:
+                            os.unlink(tmp)
+                        except OSError:
+                            pass
+                        raise
+                    self._records = merged
+                    self._stamp = self._stat()
+            finally:
+                if fcntl is not None:
+                    fcntl.flock(lf, fcntl.LOCK_UN)
+
+
+# ---------------------------------------------------------------------------
+# process-wide default store (path re-resolved so env changes take effect)
+# ---------------------------------------------------------------------------
+
+_stores: dict = {}
+_stores_lock = threading.Lock()
+
+
+def default_store() -> TuningStore:
+    path = store_file()
+    with _stores_lock:
+        s = _stores.get(path)
+        if s is None:
+            s = _stores[path] = TuningStore(path)
+        return s
+
+
+def plan_choice(key: str,
+                store: Optional[TuningStore] = None) -> Optional[dict]:
+    """The recorded backend/block choice under a prebuilt plan-kind ``key``
+    (see :func:`record_key`), or None.  Swallows every failure — the serving
+    path calls this on each ``backend="auto"`` compile and must never be
+    taken down by the store."""
+    try:
+        s = store if store is not None else default_store()
+        rec = s.get(key)
+        if rec is not None and isinstance(rec.get("choice"), dict):
+            return rec["choice"]
+    except Exception:
+        pass
+    return None
+
+
+def program_record(program_hash: str, sig: tuple,
+                   store: Optional[TuningStore] = None) -> Optional[dict]:
+    """The tuner's full decision record for one program + env signature."""
+    try:
+        s = store if store is not None else default_store()
+        return s.get(record_key("program", program_hash, sig))
+    except Exception:
+        return None

@@ -3,7 +3,13 @@
 Tier-1 (the default ``python -m pytest -x -q``) runs everything except
 tests marked ``slow``; pass ``--runslow`` for the full-size sweeps.  The
 ``pallas`` marker tags tests exercising the Pallas kernel (interpret mode on
-this container), so ``-m pallas`` selects the kernel surface alone.
+this container), so ``-m pallas`` selects the kernel surface alone; the
+``tuning`` marker tags the autotuner subsystem (``-m tuning``).
+
+Every test runs against an isolated, per-test ``RACE_TUNING_CACHE``: the
+serving path consults the persistent autotuning store on ``backend="auto"``,
+and records left behind by earlier runs (or by the developer's own tuning
+sessions in ``~/.cache/repro-race/``) must never leak into test behavior.
 """
 import pytest
 
@@ -20,6 +26,8 @@ def pytest_configure(config):
                    "(enable with --runslow)")
     config.addinivalue_line(
         "markers", "pallas: exercises the Pallas RACE-stencil kernel")
+    config.addinivalue_line(
+        "markers", "tuning: exercises the repro.tuning autotuner subsystem")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -29,3 +37,8 @@ def pytest_collection_modifyitems(config, items):
     for item in items:
         if "slow" in item.keywords:
             item.add_marker(skip_slow)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_tuning_store(tmp_path, monkeypatch):
+    monkeypatch.setenv("RACE_TUNING_CACHE", str(tmp_path / "tuning-store"))

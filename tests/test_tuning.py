@@ -1,0 +1,413 @@
+"""The autotuner subsystem (ISSUE 4): persistent store semantics (atomic,
+corruption-tolerant, schema-versioned, concurrency-safe), the measured +
+correctness-gated search, cross-process reuse of decisions with zero
+re-measurement, the ``compile_plan(backend="auto")`` store consult, the
+``tune`` wiring through ``race``/``RaceResult``/``@race_kernel``, the
+executor-layer env knobs, and the innermost-tile (``block_inner``) axis."""
+import json
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.apps.paper_kernels import get_case
+from repro.core.executor import (ExecutorCache, compile_plan,
+                                 default_backend, env_signature,
+                                 executor_cache, plan_hash, program_hash)
+from repro.core.ir import Scalar, arr, loopnest, mul, program
+from repro.core.race import race
+from repro.testing.differential import build_env, run_case
+from repro.tuning import (SCHEMA_VERSION, TuningStore, autotune,
+                          default_store, record_key, runtime_fence,
+                          store_file)
+
+pytestmark = pytest.mark.tuning
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+@pytest.fixture(autouse=True)
+def fresh_executor_cache():
+    executor_cache().clear()
+    yield
+    executor_cache().clear()
+
+
+def _case(name="gaussian", n=12):
+    return get_case(name, n)
+
+
+def _rec(key, choice=None):
+    return dict(key=key, kind="plan", hash="h", device="cpu", jax="x",
+                choice=choice or dict(reassociate=0, backend="xla",
+                                      block_rows=8, block_cols=8,
+                                      block_inner=0))
+
+
+QUICK = dict(levels=(0, 3), backends=("xla",), repeats=2, warmup=1)
+
+
+# ---------------------------------------------------------------------------
+# the persistent store
+# ---------------------------------------------------------------------------
+
+
+def test_store_roundtrip_across_instances(tmp_path):
+    path = tmp_path / "t.jsonl"
+    s1 = TuningStore(path)
+    s1.put(_rec("a"))
+    s1.put(_rec("b"))
+    s2 = TuningStore(path)  # a fresh instance sees both records
+    assert s2.get("a")["choice"]["backend"] == "xla"
+    assert sorted(s2.keys()) == ["a", "b"]
+    # every on-disk line is complete, schema-stamped JSON (atomic writes)
+    for line in path.read_text().splitlines():
+        assert json.loads(line)["schema"] == SCHEMA_VERSION
+
+
+def test_put_overwrites_by_key(tmp_path):
+    s = TuningStore(tmp_path / "t.jsonl")
+    s.put(_rec("a"))
+    s.put(_rec("a", choice=dict(reassociate=3, backend="xla")))
+    assert len(s) == 1
+    assert s.get("a")["choice"]["reassociate"] == 3
+
+
+def test_corrupt_store_degrades_never_crashes(tmp_path):
+    path = tmp_path / "t.jsonl"
+    good = json.dumps(dict(_rec("good"), schema=SCHEMA_VERSION))
+    path.write_text("not json at all\n" + good + "\n"
+                    + good[: len(good) // 2])  # truncated mid-record
+    s = TuningStore(path)
+    assert s.get("good") is not None  # the intact record still loads
+    assert len(s) == 1
+    s.put(_rec("new"))  # writing through corruption works...
+    s2 = TuningStore(path)
+    assert sorted(s2.keys()) == ["good", "new"]
+    for line in path.read_text().splitlines():  # ...and scrubs the file
+        json.loads(line)
+
+
+def test_binary_garbage_store_is_empty_not_fatal(tmp_path):
+    path = tmp_path / "t.jsonl"
+    path.write_bytes(b"\x00\xff\xfe garbage \x00" * 10)
+    assert TuningStore(path).get("anything") is None
+
+
+def test_schema_version_mismatch_ignored(tmp_path):
+    path = tmp_path / "t.jsonl"
+    path.write_text(json.dumps(dict(_rec("old"), schema=SCHEMA_VERSION + 1))
+                    + "\n")
+    s = TuningStore(path)
+    assert s.get("old") is None  # future/old schema: re-tune, don't guess
+    s.put(_rec("cur"))
+    assert TuningStore(path).get("cur") is not None
+
+
+def test_concurrent_writers_lose_no_records(tmp_path):
+    path = tmp_path / "t.jsonl"
+    errors = []
+
+    def writer(wid):
+        try:
+            s = TuningStore(path)  # own instance == own fd == real contention
+            for i in range(5):
+                s.put(_rec(f"w{wid}-{i}"))
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    final = TuningStore(path)
+    assert len(final) == 40  # read-merge-replace under flock: nothing lost
+
+
+def test_store_file_env_knob(tmp_path, monkeypatch):
+    monkeypatch.setenv("RACE_TUNING_CACHE", str(tmp_path / "d"))
+    assert store_file() == tmp_path / "d" / "tuning.jsonl"
+    monkeypatch.setenv("RACE_TUNING_CACHE", str(tmp_path / "f.jsonl"))
+    assert store_file() == tmp_path / "f.jsonl"
+
+
+# ---------------------------------------------------------------------------
+# the measured, gated search
+# ---------------------------------------------------------------------------
+
+
+def test_autotune_winner_never_slower_than_default():
+    case = _case()
+    env = build_env(case)
+    dec = autotune(case.program, env, **QUICK)
+    assert not dec.from_cache and dec.search_seconds > 0
+    assert dec.measurements and all(
+        m.status in ("ok", "gated", "error") for m in dec.measurements)
+    # the static default is always part of the measured space, so the
+    # winner is never slower than it (the acceptance invariant)
+    assert dec.tuned_us <= dec.default_us
+    assert any(m.config == dec.choice and m.ok for m in dec.measurements)
+
+
+def test_autotune_correctness_gate_rejects():
+    """tolerance=0 keeps only bitwise-faithful candidates: reassociation
+    changes summation order, so r3 must be gated and r0 must win."""
+    case = _case("calc_tpoints", 12)
+    env = build_env(case)
+    dec = autotune(case.program, env, tolerance=0.0, **QUICK)
+    assert dec.choice.reassociate == 0
+    gated = [m for m in dec.measurements if m.status == "gated"]
+    assert gated and all(m.rel_err > 0 for m in gated)
+    assert all("baseline" in m.detail for m in gated)
+
+
+def test_autotune_second_call_is_store_hit():
+    case = _case()
+    env = build_env(case)
+    dec1 = autotune(case.program, env, **QUICK)
+    dec2 = autotune(case.program, env, **QUICK)
+    assert dec2.from_cache and not dec2.measurements
+    assert dec2.choice == dec1.choice
+    assert dec2.tuned_us == pytest.approx(dec1.tuned_us)
+    # force=True re-measures in place
+    dec3 = autotune(case.program, env, force=True, **QUICK)
+    assert not dec3.from_cache and dec3.measurements
+
+
+def test_autotune_key_separates_env_signatures():
+    case12, case14 = _case(n=12), _case(n=14)
+    assert program_hash(case12.program) != program_hash(case14.program)
+    env = build_env(case12)
+    autotune(case12.program, env, **QUICK)
+    env64 = build_env(case12, dtype=np.float64)  # same program, new dtype
+    dec = autotune(case12.program, env64, **QUICK)
+    assert not dec.from_cache  # dtype is part of the key: fresh search
+
+
+# ---------------------------------------------------------------------------
+# cross-process persistence (the acceptance pin)
+# ---------------------------------------------------------------------------
+
+_CHILD = """
+import json
+import numpy as np
+from repro.apps.paper_kernels import get_case
+from repro.testing.differential import build_env
+from repro.core.race import race
+from repro.core.executor import compile_plan
+from repro.tuning import autotune
+
+case = get_case("gaussian", 12)
+env = build_env(case)
+dec = autotune(case.program, env, levels=(0, 3), backends=("xla",),
+               repeats=2, warmup=1)
+res = race(case.program, reassociate=dec.choice.reassociate)
+ex = compile_plan(res.plan, env, "auto")
+print(json.dumps(dict(from_cache=dec.from_cache,
+                      n_measurements=len(dec.measurements),
+                      choice=dec.choice.as_dict(),
+                      consulted_backend=ex.backend)))
+"""
+
+
+def test_fresh_subprocess_reuses_decision_without_remeasuring():
+    case = _case()
+    env = build_env(case)
+    dec = autotune(case.program, env, **QUICK)
+    assert not dec.from_cache  # this process did the search...
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": SRC, "JAX_PLATFORMS": "cpu"},
+        timeout=240)
+    assert proc.returncode == 0, proc.stderr
+    got = json.loads(proc.stdout.strip().splitlines()[-1])
+    # ...and a fresh process answers from the on-disk store: no measurement
+    assert got["from_cache"] is True
+    assert got["n_measurements"] == 0
+    assert got["choice"] == dec.choice.as_dict()
+    # the serving path applied the stored choice on backend="auto"
+    assert got["consulted_backend"] == dec.choice.backend
+
+
+# ---------------------------------------------------------------------------
+# compile_plan consults the store on backend="auto"
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.pallas
+def test_compile_plan_applies_stored_block_config():
+    case = _case("gaussian", 14)
+    res = race(case.program, reassociate=case.reassociate,
+               rewrite_div=case.rewrite_div)
+    env = build_env(case)
+    sig = env_signature(env)
+    key = record_key("plan", plan_hash(res.plan), sig, runtime_fence())
+    default_store().put(_rec(key, choice=dict(
+        reassociate=case.reassociate, backend="pallas", block_rows=16,
+        block_cols=8, block_inner=8)))
+    ex = compile_plan(res.plan, env, "auto")
+    assert ex.backend == "pallas"
+    assert (ex.block_rows, ex.block_inner) == (16, 8)
+    # the tuned executor still computes the right answer
+    want = compile_plan(res.plan, env, "xla")(env)
+    got = ex(env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
+    # explicit backend requests bypass the store entirely
+    assert compile_plan(res.plan, env, "pallas").block_rows == 8
+
+
+def test_compile_plan_ignores_infeasible_stored_choice():
+    """A stale/corrupt record claiming Pallas for an ineligible plan must
+    degrade to the probe's choice, not crash the serving path."""
+    loops, (i, j) = loopnest(("i", 1, 6), ("j", 1, 6))
+    out = arr("out")
+    res = race(program(loops, [(out[i, j], mul(Scalar("s"), 2.0))]))
+    env = {"s": np.float32(0.5)}
+    sig = env_signature(env)
+    key = record_key("plan", plan_hash(res.plan), sig, runtime_fence())
+    default_store().put(_rec(key, choice=dict(
+        reassociate=0, backend="pallas", block_rows=8, block_cols=8,
+        block_inner=0)))
+    ex = compile_plan(res.plan, env, "auto")
+    assert ex.backend == "xla"
+    np.testing.assert_allclose(np.asarray(ex(env)["out"]), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# the tune wiring: RaceResult.tune, race(tune=...), @race_kernel(tune=...)
+# ---------------------------------------------------------------------------
+
+
+def test_raceresult_tune_applies_winner():
+    case = _case()
+    env = build_env(case)
+    res = race(case.program, reassociate=case.reassociate,
+               rewrite_div=case.rewrite_div)
+    dec = res.tune(env, **QUICK)
+    assert dec.choice.reassociate in (0, 3)
+    want = res.run(env, "xla")  # explicit backend: the untuned path
+    got = res.run(env)  # no backend: the tuned winner
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k], np.float64),
+                                   np.asarray(want[k], np.float64),
+                                   rtol=1e-4, atol=1e-4, err_msg=k)
+
+
+def test_race_tune_flag_tunes_on_first_run():
+    case = _case()
+    env = build_env(case)
+    res = race(case.program, tune=dict(QUICK))
+    got = res.run(env)  # triggers the search (or a store hit) transparently
+    assert res._tuned  # the decision is remembered per env signature
+    (dec, _target), = res._tuned.values()
+    assert dec.choice.backend == "xla"
+    want = race(case.program, reassociate=dec.choice.reassociate).run(
+        env, "xla")
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k], np.float64),
+                                   np.asarray(want[k], np.float64),
+                                   rtol=1e-6, err_msg=k)
+    # a second result for the same program answers from the store
+    res2 = race(case.program, tune=dict(QUICK))
+    res2.run(env)
+    (dec2, _), = res2._tuned.values()
+    assert dec2.from_cache
+
+
+def test_race_kernel_tune_decorator():
+    from repro.frontend import race_kernel
+
+    @race_kernel(tune=dict(QUICK))
+    def blur(u, out):
+        n, m = u.shape
+        for i in range(1, n - 1):
+            for j in range(1, m - 1):
+                out[i, j] = (u[i - 1, j] + u[i + 1, j]
+                             + u[i, j - 1] + u[i, j + 1]) / 4.0
+
+    rng = np.random.default_rng(0)
+    env = {"u": rng.random((16, 16), dtype=np.float32),
+           "out": np.zeros((16, 16), np.float32)}
+    got = blur.run(env)
+    want = blur.run(env, backend="xla")
+    np.testing.assert_allclose(np.asarray(got["out"], np.float64),
+                               np.asarray(want["out"], np.float64),
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# executor-layer env knobs
+# ---------------------------------------------------------------------------
+
+
+def test_executor_cache_size_env_knob(monkeypatch):
+    monkeypatch.setenv("RACE_EXECUTOR_CACHE_SIZE", "2")
+    cache = ExecutorCache()  # capacity comes from the env knob
+    assert cache.maxsize == 2
+    case = _case()
+    res = race(case.program)
+    for dt in (np.float32, np.float64, np.float16):
+        compile_plan(res.plan, build_env(case, dtype=dt), "xla", cache=cache)
+    info = cache.cache_info()
+    assert info["maxsize"] == 2 and info["currsize"] == 2
+    assert info["evictions"] == 1 and info["misses"] == 3
+
+
+def test_executor_cache_size_env_knob_rejects_garbage(monkeypatch):
+    monkeypatch.setenv("RACE_EXECUTOR_CACHE_SIZE", "zero")
+    with pytest.raises(ValueError, match="RACE_EXECUTOR_CACHE_SIZE"):
+        ExecutorCache()
+    monkeypatch.setenv("RACE_EXECUTOR_CACHE_SIZE", "0")
+    with pytest.raises(ValueError, match=">= 1"):
+        ExecutorCache()
+
+
+def test_race_backend_env_knob(monkeypatch):
+    case = _case()
+    monkeypatch.setenv("RACE_BACKEND", "xla")
+    assert default_backend() == "xla"
+    res = race(case.program)  # no explicit backend: the knob decides
+    assert res.options["backend"] == "xla"
+    assert res.select_backend().backend == "xla"
+    # explicit caller choice always wins over the knob
+    assert race(case.program, backend="auto").options["backend"] == "auto"
+    monkeypatch.setenv("RACE_BACKEND", "vulkan")
+    with pytest.raises(ValueError, match="RACE_BACKEND"):
+        race(case.program)
+
+
+# ---------------------------------------------------------------------------
+# the innermost-tile axis (block_inner)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.pallas
+@pytest.mark.parametrize("name,n,bi", [("gaussian", 24, 8), ("psinv", 12, 4)])
+def test_block_inner_differentially_correct(name, n, bi):
+    report = run_case(get_case(name, n), reassociate_levels=(0, 3),
+                      block_inner=bi)
+    assert not report.failures()
+    assert report.pallas_covered()
+
+
+@pytest.mark.pallas
+def test_block_inner_is_part_of_the_executor_key():
+    case = _case("gaussian", 14)
+    res = race(case.program, reassociate=case.reassociate,
+               rewrite_div=case.rewrite_div)
+    env = build_env(case)
+    full = compile_plan(res.plan, env, "pallas")
+    tiled = compile_plan(res.plan, env, "pallas", block_inner=8)
+    assert full is not tiled  # distinct specializations, both cached
+    assert compile_plan(res.plan, env, "pallas", block_inner=8) is tiled
+    for k, v in full(env).items():
+        np.testing.assert_allclose(np.asarray(tiled(env)[k]), np.asarray(v),
+                                   rtol=1e-6, err_msg=k)
