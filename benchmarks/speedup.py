@@ -14,7 +14,7 @@ import re
 
 import jax
 
-from repro.apps.paper_kernels import TABLE1_ORDER, get_case
+from repro.apps.paper_kernels import CASES, TABLE1_ORDER, get_case
 from repro.core.executor import compile_plan
 
 from .common import build_env, csv_line, time_callable, time_fn, variants
@@ -89,7 +89,44 @@ def run(cases=None, print_fn=print, repeats: int = 5, backend: str = "xla",
         print_fn(line)
         rows.append(dict(name=name, t_base=t_base, ops_base=ops_base,
                          ops_race=ops_race, backend=backend, **speed))
-    return rows
+    # the envelope summary rides as a sibling key, not a row — per-case rows
+    # keep one uniform schema for BENCH_speedup.json consumers
+    return dict(cases=rows, envelope=envelope(print_fn=print_fn))
+
+
+def envelope(print_fn=print):
+    """Capability-envelope subsection: the Pallas-eligible fraction of the
+    *full* registry (probe only — no execution, so it always sweeps every
+    case regardless of ``--quick``).  Since the dimension-generic lowering
+    engine closed the envelope this should report 100% structural coverage;
+    a regression here means a program class silently lost the fast path.
+    Reported per case: eligibility, fallback reason codes (should be none),
+    and the lowering facts engaged (mirrored windows, gather, N-D depth)."""
+    from repro.core.backend import probe_pallas
+    from repro.core.race import race
+    from repro.testing.differential import SWEEP_SIZES
+
+    cases = []
+    eligible = 0
+    for name in sorted(CASES):
+        case = get_case(name, SWEEP_SIZES.get(name))
+        res = race(case.program, reassociate=case.reassociate,
+                   rewrite_div=case.rewrite_div)
+        cap = probe_pallas(res.plan)
+        eligible += bool(cap.eligible)
+        cases.append(dict(name=name, eligible=bool(cap.eligible),
+                          reasons=[r.code for r in cap.reasons],
+                          facts=[f.code for f in cap.facts]))
+    total = len(cases)
+    coverage = 100.0 * eligible / total if total else 0.0
+    fallback = [c["name"] for c in cases if not c["eligible"]]
+    derived = (f"pallas_eligible={eligible}/{total}"
+               f";structural_coverage={coverage:.1f}%")
+    if fallback:
+        derived += ";fallbacks=" + "|".join(fallback)
+    print_fn(csv_line("speedup.envelope", 0.0, derived))
+    return dict(name="envelope", eligible=eligible, total=total,
+                structural_coverage=coverage, cases=cases)
 
 
 if __name__ == "__main__":

@@ -387,6 +387,90 @@ def stencil_derivative(n: int = 100) -> Case:
 
 
 # ---------------------------------------------------------------------------
+# envelope kernels (not in the paper's Table 1)
+# ---------------------------------------------------------------------------
+#
+# These four cases pin the *closed capability envelope* of the
+# dimension-generic lowering engine (``repro.lowering``): each exercises one
+# mechanism that used to be a structural Pallas fallback — 1-D and 4-D nest
+# depth (N-D grid construction), negative coefficients (mirrored-origin
+# windows), repeated levels (in-kernel index gather).  They carry no paper
+# row (``paper={}``) and stay out of TABLE1_ORDER, but are full registry
+# members: the differential harness sweeps them against both backends like
+# every Table 1 case.
+
+
+def envelope_smooth1d(n: int = 40) -> Case:
+    """1-D two-pass box smoothing: the 3-point partial sum is reused at two
+    shifts — the depth-1 twin of hdifft_gm's staggered box sums."""
+    loops, (i,) = loopnest(("i", 2, n - 3))
+    u, out = arr("u"), arr("sm1")
+    ws = Scalar("ws")
+
+    def s3(d):
+        return (u[i + d - 1] + u[i + d]) + u[i + d + 1]
+
+    prog = program(loops, [(out[i], ws * (s3(0) + s3(-1)))])
+    return Case("smooth1d", "envelope", prog, reassociate=3,
+                fidelity="structural", scalars=("ws",))
+
+
+def envelope_blocked4d(n: int = 8) -> Case:
+    """4-D blocked tensor update: per-(j,i) face sums coupling consecutive
+    depth slices, reused across a j shift — a batched-stencil shape whose
+    depth-4 nest previously fell back to XLA."""
+    loops, (h, d, j, i) = loopnest(("h", 1, n - 2), ("d", 1, n - 2),
+                                   ("j", 1, n - 2), ("i", 1, n - 2))
+    T, out = arr("T4"), arr("o4")
+    dt = Scalar("dt4")
+
+    def face(dj, di):
+        return T[h, d, j + dj, i + di] + T[h, d + 1, j + dj, i + di]
+
+    def box(dj):
+        return face(dj, 0) + face(dj, 1)
+
+    prog = program(loops, [(out[h, d, j, i],
+                            T[h, d, j, i] + dt * (box(0) + box(-1)))])
+    return Case("blocked4d", "envelope", prog, reassociate=3,
+                fidelity="structural", scalars=("dt4",))
+
+
+def envelope_mirror_deriv(n: int = 40) -> Case:
+    """Mirrored-derivative: 4th-order centered derivative (along j) of a
+    mirrored 2-point pair sum ``u[M-i, .] + u[M-1-i, .]`` — every reference
+    carries a negative level-1 coefficient, lowered via the engine's
+    mirrored-origin windows."""
+    loops, (i, j) = loopnest(("i", 1, n - 2), ("j", 2, n - 3))
+    u, out = arr("u"), arr("md")
+    c1, c2 = Scalar("mc1"), Scalar("mc2")
+    M = n - 1
+
+    def pair(dj):
+        return u[-i + M, j + dj] + u[-i + (M - 1), j + dj]
+
+    prog = program(loops, [
+        (out[i, j], c1 * (pair(1) - pair(-1)) - c2 * (pair(2) - pair(-2)))])
+    return Case("mirror_deriv", "envelope", prog, reassociate=3,
+                fidelity="structural", scalars=("mc1", "mc2"))
+
+
+def envelope_diag2d(n: int = 40) -> Case:
+    """Repeated-level diagonal scaling: ``g[i, i]`` reads the diagonal of a
+    coupling matrix inside a j-shifted product chain — the ``a[i][i]`` class
+    lowered via the engine's in-kernel index gather."""
+    loops, (i, j) = loopnest(("i", 1, n - 2), ("j", 1, n - 2))
+    g, u, out = arr("gd"), arr("u"), arr("dg2")
+
+    def t(dj):
+        return g[i, i] * u[i, j + dj]
+
+    prog = program(loops, [(out[i, j], (t(-1) + t(0)) + t(1))])
+    return Case("diag2d", "envelope", prog, reassociate=3,
+                fidelity="structural")
+
+
+# ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
@@ -407,6 +491,9 @@ for _v in (1, 2, 3):
     _register(wrf_diffusion, _v)
 for _f in (mgrid_psinv, mgrid_resid, mgrid_rprj3,
            stencil_gaussian, stencil_j3d27pt, stencil_poisson, stencil_derivative):
+    _register(_f)
+for _f in (envelope_smooth1d, envelope_blocked4d, envelope_mirror_deriv,
+           envelope_diag2d):
     _register(_f)
 
 TABLE1_ORDER = [

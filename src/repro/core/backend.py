@@ -3,64 +3,66 @@
 Two realizations exist for an executable :class:`~repro.core.depgraph.Plan`:
 
   * ``"xla"``    — the whole-array JAX evaluator (``codegen``); handles every
-                   program in the paper's scope (gather path for negative
-                   coefficients, repeated levels, constant dims);
-  * ``"pallas"`` — the blocked TPU kernel (``repro.kernels.race_stencil``);
-                   faster on streaming stencils but structurally restricted.
+                   program in the paper's scope;
+  * ``"pallas"`` — the blocked kernel built by the dimension-generic lowering
+                   engine (``repro.lowering``); faster on streaming stencils.
 
-This module is the single place that knows the Pallas restrictions.  The
-probe never raises on an ineligible plan — it returns a :class:`Capability`
-whose ``reasons`` say *why* the plan must stay on XLA, so callers (the
-``auto`` backend, the differential harness, the coverage matrix) can report
-fallbacks instead of silently degrading.
+Since the lowering engine became generic over nest depth and window shape,
+the two paths cover the *same* structural envelope for well-formed programs:
+1-D and ≥4-D nests (N-D grid construction), negative coefficients
+(mirrored-origin windows), repeated levels and constant dims (in-kernel
+gather) all lower — the probe reports them as lowering *facts*, not
+fallbacks.  What remains on XLA are genuinely out-of-model programs only:
+malformed writes, zero-coefficient or fractional subscripts, per-array
+layout/stride inconsistencies, non-unit auxiliary references, and
+scalar-only data.
 
-The probe is pure plan analysis: it imports neither ``jax.experimental.pallas``
-nor the kernel module, so asking "would this lower?" is free.
+This module no longer *knows* the restrictions — it delegates to
+:func:`repro.lowering.geometry.analyze_plan`, the same analysis the engine
+itself specializes against, so the probe can never disagree with what
+actually lowers.  The probe never raises on an ineligible plan — it returns
+a :class:`Capability` whose ``reasons`` say *why* the plan must stay on XLA,
+so callers (the ``auto`` backend, the differential harness, the coverage
+matrix) can report fallbacks instead of silently degrading.
+
+The probe is pure plan analysis: the analysis modules import neither
+``jax.experimental.pallas`` nor the kernel emitter (``repro.lowering``
+loads those lazily), so asking "would this lower?" is free.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from fractions import Fraction
+from dataclasses import dataclass
+
+from repro.lowering.facts import (  # noqa: F401  (stable re-exports)
+    FALLBACK_CODES, RETIRED_CODES, R_CONSTANT_DIM, R_DEPTH,
+    R_FRACTIONAL_OFFSET, R_INCONSISTENT_LAYOUT, R_LHS_FORM, R_MIXED_STRIDE,
+    R_NEGATIVE_COEF, R_NO_BASE_ARRAY, R_REPEATED_LEVEL, R_STRIDED_AUX,
+    R_ZERO_COEF, FallbackReason, LoweringFact)
+from repro.lowering.geometry import analyze_plan
 
 from .depgraph import Plan
-from .ir import Expr, Ref, expr_refs
 
 BACKENDS = ("xla", "pallas", "auto")
-
-#: machine-readable fallback codes (stable API for tests / the harness)
-R_DEPTH = "depth"
-R_LHS_FORM = "lhs-form"
-R_CONSTANT_DIM = "constant-dim"
-R_REPEATED_LEVEL = "repeated-level"
-R_NEGATIVE_COEF = "negative-coefficient"
-R_ZERO_COEF = "zero-coefficient"
-R_FRACTIONAL_OFFSET = "fractional-offset"
-R_MIXED_STRIDE = "mixed-stride"
-R_INCONSISTENT_LAYOUT = "inconsistent-layout"
-R_STRIDED_AUX = "strided-aux"
-R_NO_BASE_ARRAY = "no-base-array"
-
-
-@dataclass(frozen=True)
-class FallbackReason:
-    """One structural obstacle to the Pallas path."""
-
-    code: str
-    detail: str
-
-    def __str__(self) -> str:  # pragma: no cover - repr sugar
-        return f"{self.code}: {self.detail}"
 
 
 @dataclass(frozen=True)
 class Capability:
-    """Result of probing a plan for Pallas eligibility."""
+    """Result of probing a plan for Pallas eligibility.
+
+    ``reasons`` are the structural obstacles (empty when eligible);
+    ``facts`` are the envelope-widening mechanisms the lowering engages
+    (mirrored-origin windows, in-kernel gather, N-D grid) — informational,
+    never blocking."""
 
     eligible: bool
     reasons: tuple = ()
+    facts: tuple = ()
 
     def explain(self) -> str:
         if self.eligible:
+            if self.facts:
+                return "pallas-eligible (" + "; ".join(
+                    str(f) for f in self.facts) + ")"
             return "pallas-eligible"
         return "; ".join(str(r) for r in self.reasons)
 
@@ -88,119 +90,21 @@ class BackendUnavailable(RuntimeError):
         )
 
 
-def _probe_ref(r: Ref, per_array: dict, reasons: list, where: str) -> None:
-    """Accumulate per-array layout facts; record reasons on violations."""
-    seen_levels = []
-    layout = []  # (level, coef) in dim order
-    for s in r.subs:
-        if s.s == 0:
-            reasons.append(FallbackReason(
-                R_CONSTANT_DIM, f"{r.name} has a constant dimension ({where})"))
-            return
-        if s.a < 0:
-            reasons.append(FallbackReason(
-                R_NEGATIVE_COEF,
-                f"{r.name} subscript {s.a}*i{s.s}+({s.b}) has a negative "
-                f"coefficient ({where})"))
-            return
-        if s.a == 0:
-            reasons.append(FallbackReason(
-                R_ZERO_COEF, f"{r.name} has a zero-coefficient subscript ({where})"))
-            return
-        if Fraction(s.b).denominator != 1:
-            reasons.append(FallbackReason(
-                R_FRACTIONAL_OFFSET,
-                f"{r.name} has fractional offset {s.b} ({where})"))
-            return
-        if s.s in seen_levels:
-            reasons.append(FallbackReason(
-                R_REPEATED_LEVEL,
-                f"{r.name} subscripts repeat loop level {s.s} ({where})"))
-            return
-        seen_levels.append(s.s)
-        layout.append((s.s, s.a))
-
-    prev = per_array.get(r.name)
-    if prev is None:
-        per_array[r.name] = layout
-        return
-    if [l for l, _ in prev] != [l for l, _ in layout]:
-        reasons.append(FallbackReason(
-            R_INCONSISTENT_LAYOUT,
-            f"{r.name} is referenced with different dim->level layouts ({where})"))
-    elif prev != layout:
-        reasons.append(FallbackReason(
-            R_MIXED_STRIDE,
-            f"{r.name} is referenced with different per-level coefficients "
-            f"({where})"))
-
-
 def probe_pallas(plan: Plan) -> Capability:
-    """Check every structural requirement of the Pallas stencil kernel.
+    """Probe a plan against the lowering engine's own analysis.
 
-    Requirements (mirrors ``repro.kernels.race_stencil``):
-      * 2-D or 3-D nest;
-      * every lhs covers all loop levels, unit-coefficient, distinct levels;
-      * base-array references: positive integer coefficients, integral
-        offsets, no constant dims, no repeated levels, one consistent
-        (dim -> level, coefficient) layout per array;
-      * auxiliary references: unit coefficient (they index the iteration
-        space directly; detection always produces these, checked anyway).
+    The verdict is *re-derived from the engine* — this is literally the
+    analysis ``repro.lowering.specialize_stencil`` builds kernels from
+    (memoized per plan instance), so reported reasons always agree with
+    what lowers: an ineligible probe means ``specialize_stencil`` raises a
+    ``LoweringError`` carrying these same structured reasons; an eligible
+    one means it succeeds for any block configuration whose input blocks
+    hold the plan's halo spread — that per-(array, level) capacity check is
+    the one *shape-dependent* failure left at specialize time, and its
+    error names the block knob to raise.
     """
-    prog = plan.program
-    m = prog.depth
-    reasons: list = []
-    if not 2 <= m <= 3:
-        reasons.append(FallbackReason(
-            R_DEPTH, f"nest depth {m} outside the kernel's 2-D/3-D scope"))
-
-    aux_names = {a.name for a in plan.aux_order}
-    all_levels = set(range(1, m + 1))
-    per_array: dict = {}
-
-    for st in plan.body:
-        lhs = st.lhs
-        lhs_levels = [s.s for s in lhs.subs]
-        if (set(lhs_levels) != all_levels
-                or len(lhs_levels) != len(set(lhs_levels))
-                or any(s.a != 1 for s in lhs.subs)):
-            reasons.append(FallbackReason(
-                R_LHS_FORM,
-                f"output {lhs.name} must sweep all {m} levels with "
-                f"unit-coefficient distinct subscripts"))
-
-    def probe_expr(e: Expr, where: str) -> None:
-        for r in expr_refs(e):
-            if not r.subs:
-                continue
-            if r.name in aux_names:
-                if any(s.a != 1 for s in r.subs):
-                    reasons.append(FallbackReason(
-                        R_STRIDED_AUX,
-                        f"auxiliary {r.name} referenced with non-unit "
-                        f"coefficient ({where})"))
-                continue
-            _probe_ref(r, per_array, reasons, where)
-
-    for st in plan.body:
-        probe_expr(st.rhs, f"main statement {st.lhs.name}")
-    for aux in plan.aux_order:
-        probe_expr(plan.aux_exprs[aux.name], f"aux {aux.name}")
-
-    if plan.body and not per_array and not reasons:
-        # scalar-only right-hand sides: the kernel would have nothing to
-        # tile (and its dtype inference nothing to look at)
-        reasons.append(FallbackReason(
-            R_NO_BASE_ARRAY,
-            "no array operand on any right-hand side (scalar-only data)"))
-
-    # dedupe while keeping first-seen order
-    uniq, seen = [], set()
-    for r in reasons:
-        if (r.code, r.detail) not in seen:
-            seen.add((r.code, r.detail))
-            uniq.append(r)
-    return Capability(eligible=not uniq, reasons=tuple(uniq))
+    a = analyze_plan(plan)
+    return Capability(eligible=a.eligible, reasons=a.reasons, facts=a.facts)
 
 
 def select_backend(plan: Plan, requested: str = "auto") -> Selection:

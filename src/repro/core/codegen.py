@@ -255,7 +255,7 @@ def build_evaluator(plan: Plan, backend: str = "auto", *, block_rows: int = 8,
     if sel.backend == "pallas":
         from functools import partial as _partial
 
-        from repro.kernels.race_stencil import race_stencil_call
+        from repro.lowering import race_stencil_call
 
         run = _partial(race_stencil_call, plan, block_rows=block_rows,
                        block_cols=block_cols, interpret=interpret)

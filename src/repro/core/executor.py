@@ -17,8 +17,10 @@ Layers:
   * :class:`CompiledRace` — one specialization per ``(plan hash, env
     signature, backend, block config)``: the XLA evaluator path jitted (the
     pre-PR-3 ``RaceResult.run`` re-jitted on *every* call), or the Pallas
-    path split into a one-time :func:`~repro.kernels.race_stencil.
-    specialize_stencil` and a jitted per-call data path; optional
+    path specialized once against the dimension-generic lowering engine's
+    :class:`~repro.lowering.LoweredStencil` artifact
+    (:func:`repro.lowering.specialize_stencil`) with a jitted per-call data
+    path; optional
     ``donate_argnums`` output-buffer reuse; a lazily-built ``jax.vmap``
     batch variant for throughput serving (:meth:`CompiledRace.run_batch`);
   * :class:`ExecutorCache` — thread-safe process-wide LRU with hit/miss/
@@ -251,7 +253,7 @@ class CompiledRace:
         self._batch_jit = None
 
         if self.backend == "pallas":
-            from repro.kernels.race_stencil import specialize_stencil
+            from repro.lowering import specialize_stencil
 
             self.spec = specialize_stencil(
                 plan,
@@ -517,11 +519,24 @@ def compile_plan(plan: Plan, env: Union[Mapping, tuple],
     if backend == "auto":
         choice = _tuned_choice(plan, sig)
         if choice is not None:
-            backend = choice["backend"]
-            if backend == "pallas":
-                block_rows = int(choice.get("block_rows", block_rows))
-                block_cols = int(choice.get("block_cols", block_cols))
-                block_inner = int(choice.get("block_inner", block_inner))
+            if choice["backend"] == "pallas":
+                try:
+                    return compile_plan(
+                        plan, sig, "pallas",
+                        block_rows=int(choice.get("block_rows", block_rows)),
+                        block_cols=int(choice.get("block_cols", block_cols)),
+                        block_inner=int(choice.get("block_inner",
+                                                   block_inner)),
+                        interpret=interpret, donate=donate, cache=cache)
+                except ValueError:
+                    # stale/corrupt stored block config (e.g. a block too
+                    # small for the plan's halo spread, from a hand-edited
+                    # or bit-rotted store): degrade to the probe-driven
+                    # static default below — a bad record must re-tune, not
+                    # take the serving path down
+                    pass
+            else:
+                backend = "xla"
     sel = _resolve(plan, backend)
     if donate is None:
         donate = False

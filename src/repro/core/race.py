@@ -68,7 +68,13 @@ class RaceResult:
         return build_baseline_evaluator(self.program)
 
     def capability(self) -> Capability:
-        """Pallas-eligibility probe with structured fallback reasons."""
+        """Pallas-eligibility verdict, re-derived from the lowering engine.
+
+        ``probe_pallas`` delegates to the engine's own analysis
+        (:func:`repro.lowering.geometry.analyze_plan`), so the structured
+        fallback ``reasons`` (and the lowering ``facts`` — mirrored-origin
+        windows, in-kernel gather, N-D grid depth) always agree with what
+        :meth:`run` actually lowers."""
         return probe_pallas(self.plan)
 
     def select_backend(self, backend: Optional[str] = None) -> Selection:

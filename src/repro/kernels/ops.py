@@ -6,7 +6,7 @@ from functools import partial
 import jax
 
 from repro.core.race import RaceResult, race
-from repro.kernels.race_stencil import race_stencil_call
+from repro.lowering import race_stencil_call
 
 
 def race_stencil(result: RaceResult, env: dict, block_rows: int = 8,

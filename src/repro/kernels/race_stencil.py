@@ -1,511 +1,29 @@
-"""Pallas TPU kernel executing a RACE plan for stencil programs.
+"""Compatibility shim — the Pallas RACE-stencil kernel now lives in
+:mod:`repro.lowering`.
 
-This is the hardware-adapted form of the paper's array contraction
-(DESIGN.md section 2, rule 3): auxiliary arrays are *never* materialized in
-HBM — each output tile recomputes its auxiliary slices into VMEM values of
-size O(tile + reuse-halo), exactly the paper's "compute the precompute loop
-inside the streaming loop with a small rolling buffer", re-expressed for the
-HBM->VMEM hierarchy.
+This module was the original 2-D/3-D special-case kernel.  The
+dimension-generic lowering engine (``src/repro/lowering/``) retired it:
+``geometry.py`` owns the halo/pad/window math (including mirrored-origin
+windows for negative coefficients), ``gather.py`` the in-kernel index
+gather for repeated-level and constant-dim references, ``blocks.py`` the
+N-D BlockSpec/grid construction, and ``emit.py`` the traceable kernel body
+plus the :class:`~repro.lowering.LoweredStencil` specialization artifact.
 
-Kernel structure
-  * the iteration space is laid out level-major (outermost loop level =
-    axis 0, innermost level = last axis, which stays full-width for the VPU
-    lanes — the paper keeps the innermost dimension uncontracted for
-    vectorization for the same reason);
-  * the grid tiles the outer level for 2-D nests and the two outer levels
-    for 3-D nests; each step sees three consecutive input blocks
-    (prev/cur/next) per blocked level via 3 (or 3x3) BlockSpecs of the same
-    operand — block-level halo exchange, the standard Pallas idiom for
-    overlapping windows;
-  * unblocked trailing axes carry a compile-time halo pad, so every shifted
-    reference is a static in-bounds slice;
-  * affine references ``A[a*i + b]`` with positive integer coefficients are
-    supported: each base array keeps one coefficient per level (probed by
-    ``repro.core.backend``), its input windows are laid out in *input*
-    coordinates (block size ``a * tile``), and every read lowers to a static
-    strided slice — this covers the paper's rprj3-class stride-2 restriction
-    kernels;
-  * auxiliary arrays index the iteration space directly (unit coefficient),
-    and are evaluated in topological order with per-aux tile extensions
-    derived from their consumers' shifts (reverse-topo pass), so every reuse
-    the detection found is realized as a VMEM hit.
-
-Programs outside this shape (negative/zero coefficients, repeated levels,
-constant dims, 1-D or >3-D nests) stay on the XLA evaluator path; the
-capability probe in ``repro.core.backend`` reports the precise reason.
+Deprecated: import from ``repro.lowering`` instead.  The historical names
+keep working here — ``StencilSpec`` is an alias of ``LoweredStencil``, and
+``plan_geometry`` is the pre-engine 5-tuple wrapper — so existing callers
+and serialized references stay valid.
 """
 from __future__ import annotations
 
-import itertools
-from dataclasses import dataclass
-from fractions import Fraction
-from functools import partial
-
-import numpy as np
-
-import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-
-from repro.core.depgraph import Plan, _aux_ref_shifts
-from repro.core.ir import Const, Expr, FuncName, Node, Ref
-
-_FUNCS = {"sin": jnp.sin, "cos": jnp.cos, "exp": jnp.exp, "log": jnp.log,
-          "sqrt": jnp.sqrt, "tanh": jnp.tanh, "abs": jnp.abs}
-
-
-# ---------------------------------------------------------------------------
-# plan geometry
-# ---------------------------------------------------------------------------
-
-
-def _ref_affine(ref: Ref):
-    """{level: (a, b)} of an affine reference with positive integer
-    coefficients (arrays may cover a subset of the nest levels, e.g. 2-D map
-    factors in a 3-D nest)."""
-    info = {}
-    for s in ref.subs:
-        if s.s == 0:
-            raise ValueError("constant dims unsupported in the Pallas path")
-        if s.a <= 0:
-            raise ValueError("non-positive coefficients stay on the XLA path")
-        if s.s in info:
-            raise ValueError("repeated levels stay on the XLA path")
-        b = Fraction(s.b)
-        if b.denominator != 1:
-            raise ValueError("fractional offsets stay on the XLA path")
-        info[s.s] = (s.a, int(b))
-    return info
-
-
-def _ref_shift(ref: Ref):
-    """{level: integer shift} of a unit-coefficient reference."""
-    sh = {}
-    for lvl, (a, b) in _ref_affine(ref).items():
-        if a != 1:
-            raise ValueError("strided aux references unsupported")
-        sh[lvl] = b
-    return sh
-
-
-def _level_perm(ref: Ref):
-    """Permutation mapping array dims -> ascending level order."""
-    lv = [s.s for s in ref.subs]
-    return tuple(np.argsort(lv))
-
-
-def plan_geometry(plan: Plan):
-    """Compute per-aux tile extensions and per-array input geometry.
-
-    Returns ``(ext, perms, levels_of, coefs, pad_in)``:
-      * ext: {aux: per-level tile extension, output coords};
-      * perms: {array: dim -> ascending-level permutation};
-      * levels_of: {array: covered levels, ascending};
-      * coefs: {array: {level: coefficient a}} (consistent per array/level);
-      * pad_in: {array: per-level halo in *input* coordinates}
-        (``a * extension + |b|`` maximized over every reference).
-    """
-    prog = plan.program
-    m = prog.depth
-    aux_names = {a.name for a in plan.aux_order}
-
-    # reverse-topo: consumers before producers
-    ext = {a.name: [0] * m for a in plan.aux_order}
-
-    def visit_consumer(expr: Expr, own_ext):
-        for nm, sh in _aux_ref_shifts(expr, aux_names):
-            for lvl in range(1, m + 1):
-                need = abs(sh.get(lvl, 0)) + own_ext[lvl - 1]
-                ext[nm][lvl - 1] = max(ext[nm][lvl - 1], need)
-
-    for st in plan.body:
-        visit_consumer(st.rhs, [0] * m)
-    for a in reversed(plan.aux_order):
-        visit_consumer(plan.aux_exprs[a.name], ext[a.name])
-
-    # per-array geometry: walk every base ref in every expr with the owning
-    # context's extension
-    perms: dict = {}
-    levels_of: dict = {}
-    dim_levels: dict = {}
-    coefs: dict = {}
-    pad_in: dict = {}
-
-    def visit_base(expr: Expr, own_ext):
-        for r in _walk_refs(expr):
-            if r.name in aux_names or not r.subs:
-                continue
-            info = _ref_affine(r)
-            lvls = tuple(sorted(info))
-            if levels_of.setdefault(r.name, lvls) != lvls:
-                raise ValueError(
-                    f"{r.name}: inconsistent level sets across references")
-            dims = tuple(s.s for s in r.subs)
-            if dim_levels.setdefault(r.name, dims) != dims:
-                raise ValueError(
-                    f"{r.name}: inconsistent dim->level layout across references")
-            perms.setdefault(r.name, _level_perm(r))
-            cur = coefs.setdefault(r.name, {l: a for l, (a, _) in info.items()})
-            if any(cur[l] != a for l, (a, _) in info.items()):
-                raise ValueError(
-                    f"{r.name}: mixed per-level coefficients across references")
-            p = pad_in.setdefault(r.name, [0] * m)
-            for lvl, (a, b) in info.items():
-                p[lvl - 1] = max(p[lvl - 1], a * own_ext[lvl - 1] + abs(b))
-
-    for st in plan.body:
-        visit_base(st.rhs, [0] * m)
-    for a in plan.aux_order:
-        visit_base(plan.aux_exprs[a.name], ext[a.name])
-    return ({k: tuple(v) for k, v in ext.items()}, perms, levels_of, coefs,
-            {k: tuple(v) for k, v in pad_in.items()})
-
-
-def _walk_refs(e: Expr):
-    from repro.core.ir import expr_refs
-
-    return expr_refs(e)
-
-
-# ---------------------------------------------------------------------------
-# kernel body generation
-# ---------------------------------------------------------------------------
-
-
-def _build_kernel(plan: Plan, ext, scalar_names, base_names, out_names,
-                  blocks, extents, levels_of, coefs, pad_in):
-    """Returns kernel(scalars, windows..., outs...) for pl.pallas_call.
-    Arrays covering a level subset broadcast via size-1 axes at the levels
-    they lack.  ``blocks`` maps grid-tiled levels to their tile size."""
-    prog = plan.program
-    m = prog.depth
-    aux_names = [a.name for a in plan.aux_order]
-    aux_levels = {a.name: a.levels for a in plan.aux_order}
-    out_tile = tuple(blocks.get(l, extents[l - 1]) for l in range(1, m + 1))
-
-    def _tile_width(lvl, re):  # tile width along a level (1-based)
-        return out_tile[lvl - 1] + 2 * re[lvl - 1]
-
-    def kernel(*refs):
-        it = iter(refs)
-        scal = next(it)  # (1, n_scalars)
-        windows = {}
-        for nm in base_names:
-            covered = levels_of[nm]
-            blk = [l for l in covered if l in blocks]
-            parts = {}
-            for ds in itertools.product((0, 1, 2), repeat=len(blk)):
-                parts[ds] = next(it)[...]
-
-            def assemble(prefix, rem):
-                if not rem:
-                    return parts[prefix]
-                ax = covered.index(rem[0])
-                return jnp.concatenate(
-                    [assemble(prefix + (d,), rem[1:]) for d in (0, 1, 2)],
-                    axis=ax)
-
-            windows[nm] = assemble((), tuple(blk))
-        outs = [next(it) for _ in out_names]
-
-        env_scalar = {nm: scal[0, i] for i, nm in enumerate(scalar_names)}
-        aux_vals = {}
-        ref_memo = {}  # (Ref, ext) -> sliced window; dedup repeated refs
-
-        def ev(e: Expr, re):
-            """Evaluate e over the tile extended by re (per level); result
-            has one axis per level (size 1 where e doesn't vary)."""
-            if isinstance(e, Const):
-                return jnp.float32(e.val)
-            if isinstance(e, Ref):
-                if not e.subs:
-                    return env_scalar[e.name]
-                key = (e, tuple(re))
-                hit = ref_memo.get(key)
-                if hit is not None:
-                    return hit
-                ref_memo[key] = val = _ev_ref(e, re)
-                return val
-            if isinstance(e, Node):
-                if e.op == "call":
-                    return _FUNCS[e.kids[0].name](ev(e.kids[1], re))
-                if e.op == "neg":
-                    return -ev(e.kids[0], re)
-                if e.op == "inv":
-                    return 1.0 / ev(e.kids[0], re)
-                a, b = ev(e.kids[0], re), ev(e.kids[1], re)
-                return {"+": a + b, "-": a - b, "*": a * b, "/": a / b}[e.op]
-            raise TypeError(e)
-
-        def _ev_ref(e: Ref, re):
-            if e.name in aux_vals:
-                sh = _ref_shift(e)
-                val, store_ext, covered = aux_vals[e.name]
-                sl = []
-                for lvl in range(1, m + 1):
-                    if lvl in covered:
-                        s0 = store_ext[lvl - 1] + sh.get(lvl, 0) - re[lvl - 1]
-                        sl.append(slice(s0, s0 + _tile_width(lvl, re)))
-                    else:
-                        sl.append(slice(0, 1))
-                return val[tuple(sl)]
-            info = _ref_affine(e)
-            w = windows[e.name]
-            covered = levels_of[e.name]
-            sl = []
-            for lvl in covered:
-                a, b = info[lvl]
-                width = _tile_width(lvl, re)
-                if lvl in blocks:
-                    # window = 3 input blocks of a*tile; "cur" starts at
-                    # a*tile; output pos r at shift b -> a*r + b + a*tile
-                    s0 = a * blocks[lvl] + b - a * re[lvl - 1]
-                else:
-                    s0 = pad_in[e.name][lvl - 1] + b - a * re[lvl - 1]
-                sl.append(slice(s0, s0 + a * (width - 1) + 1, a))
-            v = w[tuple(sl)]
-            # insert size-1 axes at missing levels
-            shape = []
-            k = 0
-            for lvl in range(1, m + 1):
-                if lvl in covered:
-                    shape.append(v.shape[k])
-                    k += 1
-                else:
-                    shape.append(1)
-            return v.reshape(shape)
-
-        # auxiliary arrays: VMEM values (the contraction payoff)
-        for nm in aux_names:
-            aux_vals[nm] = (ev(plan.aux_exprs[nm], ext[nm]), ext[nm],
-                            set(aux_levels[nm]))
-
-        for ref, st in zip(outs, plan.body):
-            val = ev(st.rhs, (0,) * m)
-            ref[...] = jnp.broadcast_to(val, out_tile).astype(ref.dtype)
-
-    return kernel
-
-
-# ---------------------------------------------------------------------------
-# host-side call: specialize-time phase vs per-call data path
-# ---------------------------------------------------------------------------
-#
-# ``specialize_stencil`` does every shape-dependent but data-independent step
-# once — geometry, halo checks, pad/slice amounts, BlockSpecs, grid, kernel
-# closure, the ``pl.pallas_call`` construction itself — and returns a
-# ``StencilSpec`` whose ``apply(env)`` is the pure per-call data path
-# (transpose/pad/slice/pallas_call/unpad), fully ``jax.jit``-traceable and
-# ``jax.vmap``-batchable.  ``race_stencil_call`` keeps the original one-shot
-# signature by chaining the two.
-
-
-@dataclass
-class _ArrayPrep:
-    """Per-call data movement for one base array (static amounts)."""
-
-    tperm: tuple  # transpose into ascending-level order, or () if identity
-    pads: tuple  # per-axis (left, right) zero pad
-    sls: tuple  # per-axis window slice after padding
-    n_copies: int  # 3**len(blocked levels): one input per halo offset combo
-
-
-@dataclass
-class StencilSpec:
-    """Specialize-time product for one (plan, shapes, dtypes, block config).
-
-    Everything here is static; :meth:`apply` only performs traceable array
-    ops, so one spec serves arbitrarily many calls (and batches) without
-    redoing host-side prep."""
-
-    plan: Plan
-    scalar_names: tuple
-    base_names: tuple
-    out_names: tuple
-    dt: object  # result dtype of the kernel operands/outputs
-    prep: dict  # base name -> _ArrayPrep
-    extents: tuple
-    out_axes: dict  # out name -> inverse level-major transpose, or ()
-    interpret: bool
-    _call: object = None  # the constructed pl.pallas_call callable
-
-    def apply(self, env: dict) -> dict:
-        """The per-call data path (traceable; shapes must match the spec)."""
-        scal = jnp.array([[env[nm] for nm in self.scalar_names]],
-                         dtype=self.dt) \
-            if self.scalar_names else jnp.zeros((1, 1), self.dt)
-        ins = [scal]
-        for nm in self.base_names:
-            pr = self.prep[nm]
-            arr = jnp.asarray(env[nm])
-            if pr.tperm:
-                arr = jnp.transpose(arr, pr.tperm)
-            if any(l or r for l, r in pr.pads):
-                arr = jnp.pad(arr, pr.pads)
-            arr = arr[pr.sls]
-            ins.extend([arr] * pr.n_copies)
-        outs = self._call(*ins)
-        result = {}
-        for nm, arr in zip(self.out_names, outs):
-            arr = arr[tuple(slice(0, e) for e in self.extents)]
-            axes = self.out_axes[nm]
-            result[nm] = jnp.transpose(arr, axes) if axes else arr
-        return result
-
-    __call__ = apply
-
-
-def specialize_stencil(plan: Plan, shapes: dict, dtypes: dict,
-                       block_rows: int = 8, block_cols: int = 8,
-                       interpret: bool = True,
-                       block_inner: int = 0) -> StencilSpec:
-    """Build the static half of the blocked Pallas execution.
-
-    ``shapes`` maps env entry names to ``np.shape``-style tuples (``()`` for
-    scalars) and ``dtypes`` to their dtypes; together they are the
-    environment *signature* the spec is specialized against.  The grid tiles
-    level 1 by ``block_rows``; 3-D nests additionally tile level 2 by
-    ``block_cols``.  The innermost level stays full-width by default (VPU
-    lanes); ``block_inner > 0`` grid-tiles it too — for very wide rows whose
-    full-width blocks would not fit VMEM — at the cost of a halo copy along
-    the innermost axis."""
-    prog = plan.program
-    m = prog.depth
-    ranges = prog.ranges()
-    extents = [ranges[l][1] - ranges[l][0] + 1 for l in range(1, m + 1)]
-    lo = [ranges[l][0] for l in range(1, m + 1)]
-    ext, perms, levels_of, coefs, pad_in = plan_geometry(plan)
-
-    blocks = {1: block_rows}
-    if m >= 3:
-        blocks[2] = block_cols
-    if block_inner:
-        blocks[m] = block_inner
-    grid_levels = sorted(blocks)
-    nb = {l: -(-extents[l - 1] // blocks[l]) for l in grid_levels}
-    grid = tuple(nb[l] for l in grid_levels)
-    grid_pos = {l: gi for gi, l in enumerate(grid_levels)}
-
-    for nm, p in pad_in.items():
-        for l in grid_levels:
-            if l in levels_of[nm] and p[l - 1] > coefs[nm][l] * blocks[l]:
-                knob = ("block_rows" if l == 1 else
-                        "block_inner" if l == m and block_inner else
-                        "block_cols")
-                raise ValueError(
-                    f"{nm}: level-{l} halo {p[l - 1]} exceeds the input block "
-                    f"size {coefs[nm][l] * blocks[l]}; raise {knob}")
-
-    scalar_names = tuple(sorted(
-        nm for nm, shp in shapes.items() if tuple(shp) == ()))
-    base_names = tuple(sorted(perms))
-    out_names = tuple(st.lhs.name for st in plan.body)
-    if not base_names:
-        raise ValueError(
-            "Pallas stencil path needs at least one array operand on a "
-            "right-hand side; this plan reads only scalars "
-            f"(env entries: {sorted(shapes)}) — run it on the XLA backend")
-    missing = [nm for nm in base_names if nm not in shapes]
-    if missing:
-        raise ValueError(f"environment is missing base arrays {missing}")
-    dt = jnp.result_type(*[np.dtype(dtypes[nm]) for nm in base_names])
-
-    # ---- input geometry: level-major layout + halo pad + block alignment --
-    in_specs = [pl.BlockSpec((1, max(len(scalar_names), 1)),
-                             lambda *pids: (0, 0))]
-
-    def _imap(covered, ds_map):
-        # block-index map: blocked axes follow the grid id plus their halo
-        # offset d in {0,1,2}; unblocked axes are one full-width block
-        def imap(*pids):
-            return tuple(
-                pids[grid_pos[l]] + ds_map[l] if l in ds_map else 0
-                for l in covered)
-        return imap
-
-    prep: dict = {}
-    for nm in base_names:
-        shape = tuple(shapes[nm])
-        tperm = tuple(np.argsort(perms[nm]))
-        if tperm == tuple(range(len(shape))):
-            tperm = ()
-        else:
-            shape = tuple(shape[i] for i in tperm)
-        covered = levels_of[nm]
-        # per-axis (input coords): window start/length; zero-pad so every
-        # slice is in bounds — cells fabricated from the zero pad only reach
-        # never-consumed aux corners
-        pads, sls, block_shape = [], [], []
-        for ax, l in enumerate(covered):
-            a = coefs[nm][l]
-            p = pad_in[nm][l - 1]
-            if l in blocks:
-                abl = a * blocks[l]
-                start = a * lo[l - 1] - abl  # one full "prev" halo block
-                length = (nb[l] + 2) * abl
-                block_shape.append(abl)
-            else:
-                start = a * lo[l - 1] - p
-                length = a * (extents[l - 1] - 1) + 2 * p + 1
-                block_shape.append(length)
-            left = max(0, -start)
-            right = max(0, start + length - shape[ax])
-            pads.append((left, right))
-            sls.append(slice(start + left, start + left + length))
-        blk = [l for l in covered if l in blocks]
-        n_copies = 3 ** len(blk)
-        prep[nm] = _ArrayPrep(tperm, tuple(pads), tuple(sls), n_copies)
-        for ds in itertools.product((0, 1, 2), repeat=len(blk)):
-            in_specs.append(pl.BlockSpec(tuple(block_shape),
-                                         _imap(covered, dict(zip(blk, ds)))))
-
-    out_tile = tuple(blocks.get(l, extents[l - 1]) for l in range(1, m + 1))
-    out_padded = tuple(nb[l] * blocks[l] if l in blocks else extents[l - 1]
-                       for l in range(1, m + 1))
-    out_shape = [jax.ShapeDtypeStruct(out_padded, dt) for _ in out_names]
-    out_specs = [pl.BlockSpec(out_tile, _imap(tuple(range(1, m + 1)), {
-        l: 0 for l in grid_levels}))
-        for _ in out_names]
-
-    out_axes = {}
-    for st in plan.body:
-        # transpose back from level-major to the output's own dim order:
-        # output dim d carries level lhs.subs[d].s -> take level-major axis s-1
-        axes = tuple(s.s - 1 for s in st.lhs.subs)
-        out_axes[st.lhs.name] = () if axes == tuple(range(m)) else axes
-
-    kernel = _build_kernel(plan, ext, scalar_names, base_names, out_names,
-                           blocks, extents, levels_of, coefs, pad_in)
-    call = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=out_specs,
-        out_shape=out_shape,
-        interpret=interpret,
-    )
-    return StencilSpec(plan=plan, scalar_names=scalar_names,
-                       base_names=base_names, out_names=out_names, dt=dt,
-                       prep=prep, extents=tuple(extents), out_axes=out_axes,
-                       interpret=interpret, _call=call)
-
-
-def race_stencil_call(plan: Plan, env: dict, block_rows: int = 8,
-                      block_cols: int = 8, interpret: bool = True,
-                      block_inner: int = 0):
-    """One-shot execution: specialize for ``env``'s signature, then apply.
-
-    env maps base array names -> arrays (laid out as in the program) and
-    scalar names -> scalars.  Returns {output name: interior array} shaped by
-    the statement ranges (level-major layout transposed back to each output's
-    own dim order).  Steady-state callers should go through
-    ``repro.core.executor``, which caches the specialization."""
-    from repro.core.executor import dtype_of
-
-    spec = specialize_stencil(
-        plan,
-        {nm: np.shape(v) for nm, v in env.items()},
-        {nm: dtype_of(v) for nm, v in env.items()},
-        block_rows=block_rows, block_cols=block_cols, interpret=interpret,
-        block_inner=block_inner)
-    return spec.apply(env)
+from repro.lowering import (  # noqa: F401
+    LoweredStencil,
+    LoweringError,
+    StencilSpec,
+    plan_geometry,
+    race_stencil_call,
+    specialize_stencil,
+)
+
+__all__ = ["LoweredStencil", "LoweringError", "StencilSpec",
+           "plan_geometry", "race_stencil_call", "specialize_stencil"]

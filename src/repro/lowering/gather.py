@@ -1,0 +1,58 @@
+"""In-kernel index gather for references outside the window model.
+
+References whose subscripts repeat a loop level (``a[i][i]`` diagonals) or
+pin a constant dimension (``a[i][3]``) have no per-dimension halo window:
+two array dims advance with the same grid axis, or one doesn't advance at
+all.  Instead of falling back to XLA, the engine passes the *whole* operand
+into the kernel (one BlockSpec pinned at block ``(0, ..., 0)``) and
+evaluates each reference as a broadcasted integer gather over the tile's
+global iteration coordinates:
+
+    index_d = a_d * (lo_s + pid_s * block_s + r_s - re_s) + b_d
+
+where ``r_s`` sweeps the (extension-widened) tile along level ``s`` and
+``pid_s`` is :func:`pl.program_id` for grid-tiled levels.  Each per-dim
+index vector is reshaped to broadcast along its level's axis, so the gather
+result carries one axis per loop level (size 1 where the reference does not
+vary) — exactly the evaluation convention of the kernel body.
+
+Out-of-range indices (tile overhang past the statement extent, and the
+never-consumed corners of extension-widened auxiliary tiles) are clamped by
+jax's gather semantics; such fabricated cells are discarded with the
+overhang or sit in aux corners no consumer reads — the same contract the
+window path's zero padding provides.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.ir import Ref
+
+from .geometry import _int_or_none
+
+
+def gather_ref(ref: Ref, data, re, *, m: int, lo: tuple, blocks: dict,
+               grid_pos: dict, out_tile: tuple):
+    """Evaluate one gather-class reference over the tile extended by ``re``.
+
+    ``data`` is the whole operand (one full-array block); the result has one
+    axis per loop level, sized ``tile + 2*re`` where the reference varies
+    and 1 elsewhere, broadcast-compatible with the window path.
+    """
+    idx = []
+    for s in ref.subs:
+        b = _int_or_none(s.b)
+        if s.s == 0:
+            idx.append(jnp.int32(b))
+            continue
+        l = s.s
+        width = out_tile[l - 1] + 2 * re[l - 1]
+        base = lo[l - 1] - re[l - 1]
+        if l in blocks:
+            base = base + pl.program_id(grid_pos[l]) * blocks[l]
+        ivec = base + jnp.arange(width, dtype=jnp.int32)  # global iteration
+        shape = [1] * m
+        shape[l - 1] = width
+        idx.append((s.a * ivec + b).reshape(shape))
+    return data[tuple(idx)]

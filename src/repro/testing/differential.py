@@ -42,6 +42,8 @@ SWEEP_SIZES = {
     "rhs_ph1": 10, "rhs_ph2": 10, "diffusion1": 10, "diffusion2": 10,
     "diffusion3": 10, "psinv": 10, "resid": 10, "rprj3": 12,
     "j3d27pt": 10, "poisson": 10, "derivative": 10,
+    # envelope cases (repro.lowering mechanisms: 1-D/4-D, mirrored, gather)
+    "smooth1d": 24, "blocked4d": 7, "mirror_deriv": 14, "diag2d": 14,
 }
 
 

@@ -63,10 +63,13 @@ def block_grid(plan: Plan, quick: bool = False) -> List[tuple]:
     """A small per-plan grid of (block_rows, block_cols, block_inner).
 
     Always includes the static default (8, 8, 0).  Extra points are added
-    only where the plan's extents make them meaningful: a taller row block
-    when level 1 has room, a wider column block for 3-D nests, and an
-    innermost tile when the last level is wide enough that tiling it is a
-    real axis (the ROADMAP's "grid-tile the innermost level" item).
+    only where the plan's extents make them meaningful — generic over nest
+    depth since the lowering engine closed the envelope: a taller row block
+    when level 1 has room (for a 1-D nest ``block_rows`` *is* its only
+    level's tile), a wider column block when any middle level (2..m-1) has
+    room, and an innermost tile when the last level is wide enough that
+    tiling it is a real axis (the ROADMAP's "grid-tile the innermost level"
+    item).
     """
     prog = plan.program
     m = prog.depth
@@ -75,10 +78,10 @@ def block_grid(plan: Plan, quick: bool = False) -> List[tuple]:
     grid = [(8, 8, 0)]
     if extents[0] > 8:
         grid.append((16, 8, 0))
-    if not quick and m >= 3 and extents[1] > 8:
+    if not quick and m >= 3 and any(e > 8 for e in extents[1:-1]):
         grid.append((8, 16, 0))
     inner = extents[-1]
-    if inner >= 32:
+    if m >= 2 and inner >= 32:
         # one tile that halves the row at least twice — wide-row relief
         grid.append((8, 8, max(16, inner // 4)))
     return grid

@@ -22,7 +22,12 @@ Durability contract (pinned by tests):
     records, and unreadable files all degrade to "no record" (the tuner
     simply re-measures); the store never raises on bad input;
   * every record carries ``schema``; bumping :data:`SCHEMA_VERSION`
-    invalidates old records without needing a migration.
+    invalidates old records without needing a migration;
+  * stores stay bounded on long-lived machines: the JSONL format is
+    last-line-wins, so :meth:`TuningStore.compact` rewrites the file keeping
+    only the newest record per key — invoked automatically when a read sees
+    the file exceed :data:`COMPACT_LINE_THRESHOLD` physical lines with
+    stale (duplicate-key or old-schema) lines among them.
 """
 from __future__ import annotations
 
@@ -82,14 +87,24 @@ def record_key(kind: str, struct_hash: str, sig: tuple,
                      str(f["device"]), str(f["jax"])))
 
 
+#: auto-compaction threshold: when a load sees more raw lines than live
+#: records and the file exceeds this many lines, the next read triggers
+#: :meth:`TuningStore.compact` (long-lived machines accumulate stale lines
+#: from older schema versions or append-mode writers).
+COMPACT_LINE_THRESHOLD = 1024
+
+
 class TuningStore:
     """Mtime-checked in-memory view over one JSON-lines store file."""
 
-    def __init__(self, path):
+    def __init__(self, path, compact_threshold: int = COMPACT_LINE_THRESHOLD):
         self.path = Path(path)
+        self.compact_threshold = compact_threshold
         self._records: dict = {}
+        self._raw_lines = 0  # physical lines last seen on disk
         self._stamp = object()  # never equals a real stat, forces first load
         self._lock = threading.Lock()
+        self._compacting = False
 
     # -- loading ------------------------------------------------------------
 
@@ -106,10 +121,12 @@ class TuningStore:
             text = self.path.read_bytes().decode("utf-8", errors="replace")
         except OSError:
             text = ""
+        n_lines = 0
         for line in text.splitlines():
             line = line.strip()
             if not line:
                 continue
+            n_lines += 1
             try:
                 rec = json.loads(line)
             except ValueError:
@@ -120,6 +137,7 @@ class TuningStore:
                 continue  # wrong schema version (or malformed): ignored
             records[rec["key"]] = rec  # later lines win
         self._records = records
+        self._raw_lines = n_lines
         self._stamp = stamp
 
     def _maybe_reload(self) -> None:
@@ -128,6 +146,20 @@ class TuningStore:
             with self._lock:
                 if stamp != self._stamp:
                     self._load(stamp)
+            self._maybe_autocompact()
+
+    def _maybe_autocompact(self) -> None:
+        """Best-effort compaction when the on-disk file has grown past the
+        line threshold with stale lines (duplicate keys, old schemas).
+        Never raises — a read must not be taken down by a failed rewrite."""
+        if (self._compacting
+                or self._raw_lines <= self.compact_threshold
+                or self._raw_lines <= len(self._records)):
+            return
+        try:
+            self.compact()
+        except Exception:  # pragma: no cover - e.g. read-only store dir
+            pass
 
     # -- read ---------------------------------------------------------------
 
@@ -145,19 +177,14 @@ class TuningStore:
 
     # -- write --------------------------------------------------------------
 
-    def put(self, record: Mapping) -> None:
-        """Merge one record (by its ``key``) and atomically rewrite the file.
+    def _rewrite_locked(self, mutate) -> None:
+        """Read-merge-replace under the advisory file lock.
 
-        Read-merge-replace under an advisory file lock: concurrent writers
-        from any number of processes serialize on the lock, each re-reads
-        the latest on-disk state before rewriting, so no record is lost; the
-        ``os.replace`` keeps every intermediate state a complete, valid
-        JSON-lines file.
+        Concurrent writers from any number of processes serialize on the
+        lock, each re-reads the latest on-disk state, applies ``mutate`` to
+        the live record dict, and atomically rewrites; the ``os.replace``
+        keeps every intermediate state a complete, valid JSON-lines file.
         """
-        rec = dict(record)
-        rec["schema"] = SCHEMA_VERSION
-        if not isinstance(rec.get("key"), str):
-            raise ValueError("tuning record needs a string 'key'")
         self.path.parent.mkdir(parents=True, exist_ok=True)
         lock_path = str(self.path) + ".lock"
         with open(lock_path, "w") as lf:
@@ -167,7 +194,7 @@ class TuningStore:
                 with self._lock:
                     self._load(self._stat())  # merge latest on-disk state
                     merged = dict(self._records)
-                    merged[rec["key"]] = rec
+                    mutate(merged)
                     fd, tmp = tempfile.mkstemp(
                         dir=str(self.path.parent),
                         prefix=self.path.name + ".", suffix=".tmp")
@@ -186,10 +213,58 @@ class TuningStore:
                             pass
                         raise
                     self._records = merged
+                    self._raw_lines = len(merged)
                     self._stamp = self._stat()
             finally:
                 if fcntl is not None:
                     fcntl.flock(lf, fcntl.LOCK_UN)
+
+    def put(self, record: Mapping) -> None:
+        """Merge one record (by its ``key``) and atomically rewrite the file
+        (see :meth:`_rewrite_locked` for the durability contract)."""
+        rec = dict(record)
+        rec["schema"] = SCHEMA_VERSION
+        if not isinstance(rec.get("key"), str):
+            raise ValueError("tuning record needs a string 'key'")
+        self._rewrite_locked(lambda merged: merged.__setitem__(rec["key"],
+                                                               rec))
+
+    def compact(self) -> int:
+        """Rewrite the store keeping only the newest record per key.
+
+        The JSONL format is last-line-wins, so files written by append-mode
+        writers (or carrying lines from older schema versions) accumulate
+        stale lines that every load must scan and skip.  Compaction rewrites
+        the file from the live record view — one line per key, newest wins —
+        under the same flock + atomic-rename discipline as :meth:`put`, and
+        is invoked automatically by reads once the file exceeds
+        ``compact_threshold`` physical lines (see ``_maybe_autocompact``).
+        Returns the number of physical lines removed.
+
+        A missing or already-compact store is a no-op: nothing is created
+        or rewritten (gratuitous churn would defeat the mtime-stamped
+        reload every reader relies on).
+        """
+        self._compacting = True  # guards the _maybe_reload -> auto recursion
+        try:
+            if self._stat() is None:
+                return 0  # no store on disk: never fabricate one
+            self._maybe_reload()
+            if self._raw_lines <= len(self._records):
+                return 0  # one line per live key already
+            removed = 0
+
+            def mutate(merged):
+                # _rewrite_locked just re-read the file under the flock, so
+                # _raw_lines is the authoritative on-disk count (no second
+                # unlocked read, no racy arithmetic)
+                nonlocal removed
+                removed = max(0, self._raw_lines - len(merged))
+
+            self._rewrite_locked(mutate)
+        finally:
+            self._compacting = False
+        return removed
 
 
 # ---------------------------------------------------------------------------

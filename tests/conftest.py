@@ -4,7 +4,9 @@ Tier-1 (the default ``python -m pytest -x -q``) runs everything except
 tests marked ``slow``; pass ``--runslow`` for the full-size sweeps.  The
 ``pallas`` marker tags tests exercising the Pallas kernel (interpret mode on
 this container), so ``-m pallas`` selects the kernel surface alone; the
-``tuning`` marker tags the autotuner subsystem (``-m tuning``).
+``lowering`` marker mirrors it for the dimension-generic lowering engine
+(``repro.lowering`` — ``-m lowering``); the ``tuning`` marker tags the
+autotuner subsystem (``-m tuning``).
 
 Every test runs against an isolated, per-test ``RACE_TUNING_CACHE``: the
 serving path consults the persistent autotuning store on ``backend="auto"``,
@@ -26,6 +28,9 @@ def pytest_configure(config):
                    "(enable with --runslow)")
     config.addinivalue_line(
         "markers", "pallas: exercises the Pallas RACE-stencil kernel")
+    config.addinivalue_line(
+        "markers", "lowering: exercises the dimension-generic Pallas "
+                   "lowering engine (repro.lowering)")
     config.addinivalue_line(
         "markers", "tuning: exercises the repro.tuning autotuner subsystem")
 

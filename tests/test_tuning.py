@@ -130,6 +130,57 @@ def test_concurrent_writers_lose_no_records(tmp_path):
     assert len(final) == 40  # read-merge-replace under flock: nothing lost
 
 
+def test_compact_keeps_newest_record_per_key(tmp_path):
+    """An append-mode history (duplicate keys, stale schemas) compacts down
+    to one line per live key, newest winning, under the atomic rewrite."""
+    path = tmp_path / "t.jsonl"
+    lines = []
+    for gen in range(5):
+        for k in range(4):
+            lines.append(json.dumps(dict(
+                schema=SCHEMA_VERSION, key=f"k{k}", gen=gen)))
+    lines.append(json.dumps(dict(schema=SCHEMA_VERSION - 1, key="old")))
+    lines.append("not json at all")
+    path.write_text("\n".join(lines) + "\n")
+    store = TuningStore(path)
+    assert len(store) == 4  # live view already dedups (last line wins)
+    removed = store.compact()
+    assert removed == 22 - 4
+    on_disk = [json.loads(l) for l in path.read_text().splitlines()]
+    assert len(on_disk) == 4
+    assert {r["key"]: r["gen"] for r in on_disk} == {
+        f"k{k}": 4 for k in range(4)}
+    # still a fully valid store afterwards
+    assert TuningStore(path).get("k2")["gen"] == 4
+
+
+def test_compact_auto_triggers_past_line_threshold(tmp_path):
+    path = tmp_path / "t.jsonl"
+    lines = [json.dumps(dict(schema=SCHEMA_VERSION, key=f"k{i % 3}", i=i))
+             for i in range(40)]
+    path.write_text("\n".join(lines) + "\n")
+    store = TuningStore(path, compact_threshold=10)
+    assert store.get("k0") is not None  # any read triggers the reload
+    assert len(path.read_text().splitlines()) == 3  # rewritten compacted
+    # below the threshold nothing rewrites (no gratuitous churn)
+    small = tmp_path / "s.jsonl"
+    small.write_text("\n".join(lines[:6]) + "\n")
+    s2 = TuningStore(small, compact_threshold=10)
+    assert s2.get("k1") is not None
+    assert len(small.read_text().splitlines()) == 6
+
+
+def test_compact_empty_and_missing_store(tmp_path):
+    path = tmp_path / "missing.jsonl"
+    store = TuningStore(path)
+    assert store.compact() == 0  # no file: a no-op, never a crash
+    assert not path.exists()  # ...and nothing fabricated on disk
+    store.put(_rec("a"))
+    mtime = path.stat().st_mtime_ns
+    assert store.compact() == 0  # already compact: no gratuitous rewrite
+    assert path.stat().st_mtime_ns == mtime
+
+
 def test_store_file_env_knob(tmp_path, monkeypatch):
     monkeypatch.setenv("RACE_TUNING_CACHE", str(tmp_path / "d"))
     assert store_file() == tmp_path / "d" / "tuning.jsonl"
@@ -262,6 +313,30 @@ def test_compile_plan_applies_stored_block_config():
                                    rtol=1e-5, atol=1e-5, err_msg=k)
     # explicit backend requests bypass the store entirely
     assert compile_plan(res.plan, env, "pallas").block_rows == 8
+
+
+@pytest.mark.pallas
+def test_compile_plan_degrades_on_stale_block_config():
+    """A stored Pallas choice whose blocks cannot hold the plan's halo (a
+    hand-edited or bit-rotted record) must degrade to the static default —
+    the store contract is 'bad records re-tune', never a serving crash."""
+    case = _case("gaussian", 14)
+    res = race(case.program, reassociate=case.reassociate,
+               rewrite_div=case.rewrite_div)
+    env = build_env(case)
+    sig = env_signature(env)
+    key = record_key("plan", plan_hash(res.plan), sig, runtime_fence())
+    default_store().put(_rec(key, choice=dict(
+        reassociate=case.reassociate, backend="pallas", block_rows=1,
+        block_cols=8, block_inner=0)))
+    ex = compile_plan(res.plan, env, "auto")  # must not raise
+    assert ex.backend == "pallas"
+    assert ex.block_rows == 8  # the static default, not the stale record
+    want = compile_plan(res.plan, env, "xla")(env)
+    got = ex(env)
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=1e-5, atol=1e-5, err_msg=k)
 
 
 def test_compile_plan_ignores_infeasible_stored_choice():
