@@ -7,6 +7,8 @@ Sections: table1 (Table 1), speedup (Figs 7-8), scaling (Fig 9),
 memory (Fig 10), serving (PR-3 executor cache: cold vs steady-state µs/call,
 hit rate, batched throughput), tuning (ISSUE-4 autotuner: static default vs
 correctness-gated measured winner, search time, store round-trip),
+grad (ISSUE-6 differentiable RACE: fwd vs fwd+bwd µs/step, adjoint-plan
+count and elimination fraction, executor-cache reuse across grad steps),
 roofline (EXPERIMENTS.md section Roofline;
 reads the dry-run JSON and is skipped with a note if the dry-run has not
 been run).  Fig 11 (OpenMP thread scaling) has no analogue on this 1-core
@@ -64,7 +66,7 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else None
 
     sections = []
-    from . import memory, scaling, serving, speedup, table1, tuning
+    from . import grad, memory, scaling, serving, speedup, table1, tuning
 
     sections = [
         ("table1", lambda: table1.run()),
@@ -77,6 +79,8 @@ def main() -> None:
                                         interpret=not args.compiled)),
         ("tuning", lambda: tuning.run(quick=args.quick,
                                       interpret=not args.compiled)),
+        ("grad", lambda: grad.run(quick=args.quick,
+                                  interpret=not args.compiled)),
     ]
     if args.from_frontend:
         from . import frontend

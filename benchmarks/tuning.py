@@ -48,7 +48,9 @@ def run(print_fn=print, quick: bool = False, repeats: int = None,
                        warmup=1, quick=quick, interpret=interpret,
                        default_reassociate=case.reassociate,
                        rewrite_div=case.rewrite_div, store=store)
-        redo = autotune(case.program, env, levels=levels,
+        # same search-shaping options as the first call: the store key now
+        # includes them (a narrowed search never answers a wider one)
+        redo = autotune(case.program, env, levels=levels, quick=quick,
                         default_reassociate=case.reassociate,
                         rewrite_div=case.rewrite_div, store=store)
         if dec.default_us is None:  # default gated/errored: name the culprit

@@ -34,6 +34,9 @@ def main():
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--steps", type=int, default=None)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--race-smooth", type=int, default=2, metavar="R",
+                    help="radius of the RACE-optimized causal FIR mixer "
+                         "(fwd+bwd run through the RACE pipeline; 0 = off)")
     args = ap.parse_args()
 
     base = get_config("qwen3_14b")
@@ -47,7 +50,9 @@ def main():
             base, name="qwen3-100m", num_layers=10, d_model=640, n_heads=10,
             n_kv_heads=2, d_head=64, d_ff=1792, vocab=32768)
         steps, batch, seq = args.steps or 300, 8, 512
-    print(f"model: {cfg.name}  params={cfg.n_params()/1e6:.1f}M  steps={steps}")
+    cfg = dataclasses.replace(cfg, race_smooth_radius=args.race_smooth)
+    print(f"model: {cfg.name}  params={cfg.n_params()/1e6:.1f}M  steps={steps}"
+          f"  race_smooth_radius={cfg.race_smooth_radius}")
 
     exec_cfg = ExecConfig(attn_chunk_q=min(128, seq), attn_chunk_k=min(128, seq),
                           ssm_chunk=64, loss_chunk=min(128, seq))
@@ -67,6 +72,7 @@ def main():
         "final_loss": round(out["losses"][-1], 4),
         "loss_dropped": out["losses"][-1] < out["losses"][0],
         "steps": out["step"],
+        "race_cache": out.get("race_cache", {}),
     }))
 
 

@@ -272,9 +272,21 @@ class CompiledRace:
             core = lambda env: interior(plan, plan_run(env))  # noqa: E731
         self._core = core
 
+        # differentiability: wrap the core in a custom_vjp whose backward
+        # runs the RACE-optimized *adjoint-stencil* plans (repro.core.
+        # adjoint) instead of autodiff through the forward internals (the
+        # plan evaluator's optimization_barrier has no JVP; the Pallas
+        # kernel is opaque to autodiff entirely).  The primal path is the
+        # bare core, so non-grad callers are unaffected.
+        from .adjoint import make_custom_vjp
+
+        self._vjp_core = make_custom_vjp(core, plan.program,
+                                         interpret=interpret)
+        vjp_core = self._vjp_core
+
         def _call(env_in, env_out):
             self.trace_count += 1  # python side effect: fires at trace only
-            return core({**env_in, **env_out})
+            return vjp_core({**env_in, **env_out})
 
         jit_kw = dict(donate_argnums=(1,)) if donate else {}
         self._jit = jax.jit(_call, **jit_kw)
@@ -316,11 +328,11 @@ class CompiledRace:
         if self._batch_jit is None:
             with self._batch_lock:
                 if self._batch_jit is None:
-                    core = self._core
+                    vjp_core = self._vjp_core
 
                     def _bcall(env):
                         self.batch_trace_count += 1
-                        return core(env)
+                        return vjp_core(env)
 
                     self._batch_jit = jax.jit(jax.vmap(_bcall))
         self.batch_calls += 1

@@ -98,9 +98,13 @@ class RaceResult:
 
         opts = self.options
         # rebuild each level with the same plan-shaping knobs as this result,
-        # so the plans the tuner measures are the plans run() will execute
+        # so the plans the tuner measures are the plans run() will execute.
+        # "esr" is deliberately excluded: ESR(+) is a paper-comparison
+        # baseline that restricts detection to the innermost level, and
+        # forwarding it would make the tuner measure (and persist) those
+        # handicapped plans as the winners for the *unrestricted* search
         race_opts = {k: opts[k]
-                     for k in ("esr", "contraction", "cost_model",
+                     for k in ("contraction", "cost_model",
                                "rewrite_sub", "max_rounds",
                                "mis_exact_limit")
                      if k in opts}
@@ -110,9 +114,12 @@ class RaceResult:
         kw.setdefault("race_opts", race_opts)
         dec = autotune(self.program, env, **kw)
         ch = dec.choice
-        if ch.reassociate == opts.get("reassociate", 0):
+        if (ch.reassociate == opts.get("reassociate", 0)
+                and not opts.get("esr")):
             target = self
         else:
+            # an ESR result always rebuilds, even at its own level: the
+            # tuner measured unrestricted plans, so serving must run them
             target = race(self.program, reassociate=ch.reassociate,
                           rewrite_div=opts.get("rewrite_div", False),
                           backend=opts.get("backend"), **race_opts)
@@ -120,11 +127,16 @@ class RaceResult:
         return dec
 
     def _tuned_entry(self, env, sig):
-        """(decision, target result) for sig, auto-tuning when requested."""
+        """(decision, target result) for sig, auto-tuning when requested.
+        ``env`` may be a zero-arg callable producing the example env, so
+        callers can defer expensive materialization (run_batch slices the
+        stacked batch) to the one path that needs concrete values."""
         from .executor import env_signature
 
         entry = self._tuned.get(sig)
         if entry is None and self.options.get("tune") is not None:
+            if callable(env):
+                env = env()
             # race(tune=True) stores {}; race(tune={...}) forwards the kwargs
             self.tune(dict(env), **self.options["tune"])
             entry = self._tuned.get(sig) or self._tuned.get(
@@ -195,7 +207,11 @@ class RaceResult:
         if isinstance(envs, dict):
             sig = stacked_signature(envs)
             # per-example env (batch element 0) for a possible tune trigger
-            example = {k: _np.asarray(v)[0] for k, v in envs.items()}
+            # — built *lazily*: slicing element 0 host-transfers the whole
+            # stacked batch (and breaks under jit tracing), so it must only
+            # happen if an actual tune run needs concrete data
+            example = lambda: {k: _np.asarray(v)[0]  # noqa: E731
+                               for k, v in envs.items()}
         else:
             envs = list(envs)
             if not envs:

@@ -29,8 +29,8 @@ from __future__ import annotations
 from .facts import (FALLBACK_CODES, RETIRED_CODES, R_CONSTANT_DIM, R_DEPTH,
                     R_FRACTIONAL_OFFSET, R_INCONSISTENT_LAYOUT, R_LHS_FORM,
                     R_MIXED_STRIDE, R_NEGATIVE_COEF, R_NO_BASE_ARRAY,
-                    R_REPEATED_LEVEL, R_STRIDED_AUX, R_ZERO_COEF,
-                    FallbackReason, LoweringError, LoweringFact)
+                    R_REPEATED_LEVEL, R_SCALAR_AUX, R_STRIDED_AUX,
+                    R_ZERO_COEF, FallbackReason, LoweringError, LoweringFact)
 from .geometry import (K_GATHER, K_WINDOW, ArrayInfo, LoweringAnalysis,
                        analyze_plan, plan_geometry)
 
@@ -44,7 +44,7 @@ __all__ = [
     "FALLBACK_CODES", "RETIRED_CODES", "R_CONSTANT_DIM", "R_DEPTH",
     "R_FRACTIONAL_OFFSET", "R_INCONSISTENT_LAYOUT", "R_LHS_FORM",
     "R_MIXED_STRIDE", "R_NEGATIVE_COEF", "R_NO_BASE_ARRAY",
-    "R_REPEATED_LEVEL", "R_STRIDED_AUX", "R_ZERO_COEF",
+    "R_REPEATED_LEVEL", "R_SCALAR_AUX", "R_STRIDED_AUX", "R_ZERO_COEF",
     "FallbackReason", "LoweringError", "LoweringFact",
     "K_GATHER", "K_WINDOW", "ArrayInfo", "LoweringAnalysis",
     "analyze_plan", "plan_geometry",

@@ -33,6 +33,7 @@ R_FRACTIONAL_OFFSET = "fractional-offset"
 R_MIXED_STRIDE = "mixed-stride"
 R_INCONSISTENT_LAYOUT = "inconsistent-layout"
 R_STRIDED_AUX = "strided-aux"
+R_SCALAR_AUX = "scalar-aux"
 R_NO_BASE_ARRAY = "no-base-array"
 
 #: Retired fallback codes: since the dimension-generic lowering engine these
@@ -47,7 +48,7 @@ R_CONSTANT_DIM = "constant-dim"  # → in-kernel index gather
 #: The codes that can still appear in ``Capability.reasons``.
 FALLBACK_CODES = (R_LHS_FORM, R_ZERO_COEF, R_FRACTIONAL_OFFSET,
                   R_MIXED_STRIDE, R_INCONSISTENT_LAYOUT, R_STRIDED_AUX,
-                  R_NO_BASE_ARRAY)
+                  R_SCALAR_AUX, R_NO_BASE_ARRAY)
 
 #: The codes that appear only as lowering facts now.
 RETIRED_CODES = (R_DEPTH, R_NEGATIVE_COEF, R_REPEATED_LEVEL, R_CONSTANT_DIM)

@@ -42,8 +42,8 @@ from repro.core.ir import Expr, Ref, expr_refs
 from .facts import (R_CONSTANT_DIM, R_DEPTH, R_FRACTIONAL_OFFSET,
                     R_INCONSISTENT_LAYOUT, R_LHS_FORM, R_MIXED_STRIDE,
                     R_NEGATIVE_COEF, R_NO_BASE_ARRAY, R_REPEATED_LEVEL,
-                    R_STRIDED_AUX, R_ZERO_COEF, FallbackReason, LoweringError,
-                    LoweringFact)
+                    R_SCALAR_AUX, R_STRIDED_AUX, R_ZERO_COEF, FallbackReason,
+                    LoweringError, LoweringFact)
 
 #: array classification (ArrayInfo.kind)
 K_WINDOW = "window"  # blocked halo-exchange windows (the fast path)
@@ -132,6 +132,16 @@ def _analyze(plan: Plan) -> LoweringAnalysis:
     facts: list = []
     aux_names = {a.name for a in plan.aux_order}
     all_levels = set(range(1, m + 1))
+
+    # ---- auxiliaries must carry at least one loop level --------------------
+    # (a rank-0 aux — fully loop-invariant — has no tile geometry; the
+    # emitter's scalar path only knows env scalars.  Adjoint-stencil plans
+    # are the first to produce these.)
+    for aux in plan.aux_order:
+        if not aux.levels:
+            reasons.append(FallbackReason(
+                R_SCALAR_AUX,
+                f"auxiliary {aux.name} is loop-invariant (rank 0)"))
 
     # ---- output form: every lhs sweeps all levels, unit, distinct ----------
     for st in plan.body:
@@ -237,7 +247,11 @@ def _analyze(plan: Plan) -> LoweringAnalysis:
             coefs={l: abs(a) for l, a in coefs.items()},
             signs={l: (1 if a > 0 else -1) for l, a in coefs.items()})
 
-    if plan.body and not refs_by_array and not reasons:
+    # scalar-aux reasons don't mask this one: a scalar-only program usually
+    # materializes its loop-invariant subexpressions as rank-0 auxiliaries,
+    # and callers key off no-base-array to explain the fallback.
+    if (plan.body and not refs_by_array
+            and all(r.code == R_SCALAR_AUX for r in reasons)):
         reasons.append(FallbackReason(
             R_NO_BASE_ARRAY,
             "no array operand on any right-hand side (scalar-only data)"))

@@ -55,6 +55,13 @@ class ModelConfig:
     # modality-frontend stub (audio): precomputed frame embeddings
     input_embed_dim: int = 0
 
+    # RACE-optimized causal FIR residual mixer over the token stream
+    # (repro.models.ssm.race_smooth): 0 = off; R > 0 adds R+1 tap scalars
+    # and routes the mixer's forward AND gradient through the RACE
+    # detect/eliminate/compile pipeline (train path only — taps start at
+    # zero, so prefill/decode parity holds at init)
+    race_smooth_radius: int = 0
+
     # numerics / training
     dtype: str = "bfloat16"
     remat: bool = True
@@ -79,6 +86,8 @@ class ModelConfig:
         total = V * D  # embed
         if not self.tie_embeddings:
             total += V * D
+        if self.race_smooth_radius:
+            total += self.race_smooth_radius + 1  # FIR taps
         attn = D * H * dh + 2 * D * KV * dh + H * dh * D
         mlp = 3 * D * F
         for li in range(self.num_layers):

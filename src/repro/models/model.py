@@ -26,7 +26,8 @@ from .common import (ExecConfig, dense_init, init_rmsnorm, keygen, rmsnorm,
 from .config import ModelConfig
 from .moe import init_mlp, init_moe, mlp_block, moe_block
 from .ssm import (init_mamba, init_mamba_cache, init_rglru, init_rglru_cache,
-                  mamba_block, mamba_decode, rglru_block, rglru_decode)
+                  mamba_block, mamba_decode, race_smooth, rglru_block,
+                  rglru_decode)
 
 
 # ---------------------------------------------------------------------------
@@ -203,6 +204,10 @@ def init_params(key, cfg: ModelConfig, n_units_override: Optional[int] = None):
         p["in_proj"] = dense_init(next(kg), (cfg.input_embed_dim, cfg.d_model), dt)
     else:
         p["embed"] = dense_init(next(kg), (cfg.vocab, cfg.d_model), dt)
+    if cfg.race_smooth_radius:
+        # zero taps: the RACE mixer starts as the identity residual
+        p["smooth_taps"] = jnp.zeros((cfg.race_smooth_radius + 1,),
+                                     jnp.float32)
     return p
 
 
@@ -221,6 +226,9 @@ def forward_hidden(params, cfg: ModelConfig, exec_cfg: ExecConfig, batch: dict,
         x = batch["embeds"].astype(jnp.dtype(cfg.dtype)) @ params["in_proj"]
     else:
         x = params["embed"][batch["tokens"]]
+    if cfg.race_smooth_radius:
+        x = x + race_smooth(x, params["smooth_taps"],
+                            radius=cfg.race_smooth_radius)
     S = x.shape[1]
     rope = _rope_cache(cfg, S)
     vision = batch.get("vision")

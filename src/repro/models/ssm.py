@@ -83,6 +83,64 @@ def _causal_conv1d(x, w, state=None):
 
 
 # ---------------------------------------------------------------------------
+# RACE-optimized causal FIR mixer (the differentiable-RACE integration point)
+# ---------------------------------------------------------------------------
+
+#: memoized RACE results per (seq_len, channels, radius) — detection and
+#: planning run once per shape; every train step reuses the compiled executor
+_smooth_results: dict = {}
+
+
+def _smooth_result(S: int, C: int, R: int):
+    key = (S, C, R)
+    res = _smooth_results.get(key)
+    if res is None:
+        from repro.core.ir import Scalar, arr, loopnest, program
+        from repro.core.race import race
+
+        loops, (s, c) = loopnest(("s", 0, S - 1), ("c", 0, C - 1))
+        xs, ys = arr("sx"), arr("sy")
+
+        def box(t):  # the 3-point partial sum RACE detects and reuses
+            return (xs[t, c] + xs[t + 1, c]) + xs[t + 2, c]
+
+        expr = Scalar("sw0") * box(s + R)
+        for d in range(1, R + 1):
+            expr = expr + Scalar(f"sw{d}") * box(s + R - d)
+        res = _smooth_results[key] = race(program(loops, [(ys[s, c], expr)]),
+                                          reassociate=3)
+    return res
+
+
+def race_smooth(x, taps, *, radius: int, backend: str = "xla",
+                interpret: bool = True):
+    """Causal FIR residual mixer over the token stream, computed — forward
+    *and* backward — through the RACE pipeline.
+
+    ``y[s] = sum_d taps[d] * b(s + R - d)`` with ``b(t)`` a 3-point box sum
+    of the left-padded stream: consecutive taps at consecutive positions
+    share their box sums, which RACE detects and materializes once (the
+    same staggered-sum shape as the paper's hdifft_gm).  The gradient
+    w.r.t. ``x`` and ``taps`` flows through the executor's adjoint-stencil
+    ``custom_vjp``, so training exercises RACE end to end.
+
+    x: (B, S, C); taps: (radius+1,) — zero taps make this the identity
+    residual, so enabling the mixer never perturbs a fresh model.
+    """
+    B, S, C = x.shape
+    R = int(radius)
+    P = R + 2  # left pad: deepest reach of box(s + R - R) .. box(s + R) + 2
+    res = _smooth_result(S, B * C, R)
+    xp = jnp.pad(x.astype(jnp.float32), ((0, 0), (P, 0), (0, 0)))
+    env = {"sx": xp.transpose(1, 0, 2).reshape(S + P, B * C),
+           "sy": jnp.zeros((S, B * C), jnp.float32)}
+    for d in range(R + 1):
+        env[f"sw{d}"] = taps[d].astype(jnp.float32)
+    y = res.run(env, backend, interpret=interpret)["sy"]
+    return y.reshape(S, B, C).transpose(1, 0, 2).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
 # Mamba-1
 # ---------------------------------------------------------------------------
 

@@ -145,5 +145,11 @@ class Trainer:
         if self.step >= self.cfg.total_steps or self._preempted:
             self._save()
             self.ckpt.wait()
+        try:  # RACE executor-cache counters: plan reuse across train steps
+            from repro.core.executor import cache_stats
+            race_cache = cache_stats()
+        except Exception:  # pragma: no cover - models without RACE blocks
+            race_cache = {}
         return {"losses": losses, "stragglers": self.straggler_events,
-                "restarts": self.restarts, "step": self.step}
+                "restarts": self.restarts, "step": self.step,
+                "race_cache": race_cache}

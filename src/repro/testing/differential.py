@@ -48,16 +48,19 @@ SWEEP_SIZES = {
 
 
 def default_tolerances(dtype) -> dict:
-    """(rtol vs baseline, rtol Pallas-vs-XLA-plan) per dtype.
+    """(rtol vs baseline, rtol Pallas-vs-XLA-plan, rtol of gradients vs the
+    autodiff'd baseline) per dtype.
 
     Reassociation changes summation order, so the baseline comparison needs
     headroom; the two realizations of the *same* plan share an association
-    order and are held much tighter."""
+    order and are held much tighter.  Gradients accumulate one extra
+    reduction (the adjoint contraction), so they get another factor of
+    headroom over the forward tolerance."""
     dt = np.dtype(dtype)
     return {
-        np.dtype(np.float64): dict(baseline=1e-9, plan=1e-12),
-        np.dtype(np.float32): dict(baseline=1e-4, plan=1e-5),
-        np.dtype(np.float16): dict(baseline=2e-2, plan=1e-2),
+        np.dtype(np.float64): dict(baseline=1e-9, plan=1e-12, grad=1e-8),
+        np.dtype(np.float32): dict(baseline=1e-4, plan=1e-5, grad=2e-4),
+        np.dtype(np.float16): dict(baseline=2e-2, plan=1e-2, grad=4e-2),
     }[dt]
 
 
@@ -134,25 +137,26 @@ def run_case(case, reassociate_levels: Iterable[int] = (0, 3, 4),
              tolerances: Optional[dict] = None,
              interpret: bool = True) -> CaseReport:
     """Differential-verify one case across plans and backends."""
+    tol = tolerances or default_tolerances(dtype)
+    with _x64_ctx(dtype):
+        return _run_case_impl(case, reassociate_levels, backends, dtype, seed,
+                              block_rows, block_cols, block_inner, tol,
+                              interpret)
+
+
+def _x64_ctx(dtype):
+    """Scoped x64 so f64 sweeps don't silently downcast to f32."""
     import contextlib
 
     import jax
 
-    tol = tolerances or default_tolerances(dtype)
-    # scoped x64 so f64 sweeps don't silently downcast to f32
-    if np.dtype(dtype) == np.float64:
-        if hasattr(jax, "enable_x64"):
-            ctx = jax.enable_x64(True)
-        else:  # pinned 0.4.x spelling
-            from jax.experimental import enable_x64
+    if np.dtype(dtype) != np.float64:
+        return contextlib.nullcontext()
+    if hasattr(jax, "enable_x64"):
+        return jax.enable_x64(True)
+    from jax.experimental import enable_x64  # pinned 0.4.x spelling
 
-            ctx = enable_x64()
-    else:
-        ctx = contextlib.nullcontext()
-    with ctx:
-        return _run_case_impl(case, reassociate_levels, backends, dtype, seed,
-                              block_rows, block_cols, block_inner, tol,
-                              interpret)
+    return enable_x64()
 
 
 def _run_case_impl(case, reassociate_levels, backends, dtype, seed,
@@ -206,6 +210,106 @@ def _run_case_impl(case, reassociate_levels, backends, dtype, seed,
                 combo.reason = f"{type(e).__name__}: {e}"
             report.combos.append(combo)
     return report
+
+
+# ---------------------------------------------------------------------------
+# gradient sweep — jax.grad through the RACE executor vs through the baseline
+# ---------------------------------------------------------------------------
+
+
+def run_grad_case(case, reassociate_levels: Iterable[int] = (0, 3, 4),
+                  backends: Iterable[str] = ("xla", "pallas"),
+                  dtype=np.float32, seed: int = 0,
+                  tolerances: Optional[dict] = None,
+                  interpret: bool = True) -> CaseReport:
+    """Differential-verify ``jax.grad`` through the RACE serving path.
+
+    For each (reassociate level, forward backend) combo, takes the gradient
+    of a fixed cosine-projection loss over the interior outputs — once
+    through ``res.run`` (which carries the adjoint-stencil ``custom_vjp``)
+    and once through plain autodiff of the untransformed baseline evaluator
+    — and compares the gradients w.r.t. every inexact input at the per-dtype
+    ``grad`` tolerance.  Pallas combos are gated by the capability probe
+    exactly like :func:`run_case`; cases whose adjoint stencil cannot be
+    built (the detector refuses: strided reads, repeated levels, ...) still
+    run — the VJP falls back to autodiff — and the combo carries the
+    refusal reason for visibility.
+    """
+    tol = tolerances or default_tolerances(dtype)
+    with _x64_ctx(dtype):
+        return _run_grad_case_impl(case, reassociate_levels, backends, dtype,
+                                   seed, tol, interpret)
+
+
+def _run_grad_case_impl(case, reassociate_levels, backends, dtype, seed, tol,
+                        interpret) -> CaseReport:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.adjoint import adjoint_build
+
+    env = build_env(case, dtype=dtype, seed=seed)
+    report = CaseReport(case.name)
+
+    base_res = race(case.program)
+    base_eval = base_res.baseline_evaluator()
+    truth_out = interior(base_res.plan, base_eval(env))
+    # fixed, deterministic projection: every output element contributes with
+    # a distinct weight, so a gradient error anywhere shows up in the loss
+    weights = {k: jnp.asarray(
+        np.cos(np.arange(v.size)).reshape(np.shape(v)).astype(dtype))
+        for k, v in truth_out.items()}
+    diff_keys = sorted(k for k, v in env.items()
+                       if np.issubdtype(np.asarray(v).dtype, np.floating))
+    params0 = {k: env[k] for k in diff_keys}
+
+    def loss_of(outs):
+        return sum(jnp.sum(jnp.asarray(outs[k]) * w)
+                   for k, w in weights.items())
+
+    truth_grads = jax.grad(lambda p: loss_of(interior(
+        base_res.plan, base_eval({**env, **p}))))(params0)
+
+    build = adjoint_build(case.program)
+    adjoint_note = "" if build.ok else f"adjoint-autodiff: {build.reason}"
+
+    for lvl in reassociate_levels:
+        res = race(case.program, reassociate=lvl,
+                   rewrite_div=case.rewrite_div)
+        for backend in backends:
+            combo = ComboResult(case.name, lvl, backend, "ok",
+                                reason=adjoint_note,
+                                n_aux=res.n_aux_materialized())
+            try:
+                if backend == "pallas":
+                    sel = select_backend(res.plan, "auto")
+                    if sel.backend != "pallas":
+                        combo.status = "fallback"
+                        combo.reason = sel.capability.explain()
+                        report.combos.append(combo)
+                        continue
+                grads = jax.grad(lambda p: loss_of(res.run(
+                    {**env, **p}, backend, interpret=interpret)))(params0)
+                combo.max_rel_err = _rel_err(grads, truth_grads)
+                if combo.max_rel_err > tol["grad"]:
+                    combo.status = "mismatch"
+                    combo.reason = (f"grads vs baseline: "
+                                    f"{combo.max_rel_err:.2e} > "
+                                    f"{tol['grad']:.0e}")
+            except Exception as e:  # noqa: BLE001 - reported, not swallowed
+                combo.status = "error"
+                combo.reason = f"{type(e).__name__}: {e}"
+            report.combos.append(combo)
+    return report
+
+
+def grad_sweep_registry(names: Optional[Iterable[str]] = None,
+                        sizes: Optional[dict] = None, **kw) -> list:
+    """Run :func:`run_grad_case` over (a subset of) the kernel registry."""
+    sizes = {**SWEEP_SIZES, **(sizes or {})}
+    if names is None:
+        names = list(CASES)
+    return [run_grad_case(get_case(n, sizes.get(n)), **kw) for n in names]
 
 
 def sweep_registry(names: Optional[Iterable[str]] = None,

@@ -27,10 +27,11 @@ from .space import REASSOCIATE_LEVELS, Config, block_grid, candidate_configs
 from .store import (ENV_STORE, SCHEMA_VERSION, TuningStore, default_store,
                     plan_choice, program_record, record_key, runtime_fence,
                     sig_json, store_file)
-from .tuner import TuningDecision, autotune
+from .tuner import TuningDecision, autotune, search_signature
 
 __all__ = [
     "autotune", "TuningDecision", "Config", "Measurement", "TuningStore",
+    "search_signature",
     "candidate_configs", "block_grid", "measure_candidate", "time_executor",
     "default_store", "store_file", "plan_choice", "program_record",
     "record_key", "runtime_fence", "sig_json", "REASSOCIATE_LEVELS",

@@ -22,7 +22,10 @@ Durability contract (pinned by tests):
     records, and unreadable files all degrade to "no record" (the tuner
     simply re-measures); the store never raises on bad input;
   * every record carries ``schema``; bumping :data:`SCHEMA_VERSION`
-    invalidates old records without needing a migration;
+    invalidates old records without needing a migration — but other-schema
+    lines are *preserved verbatim* through rewrites and compaction (deduped
+    by their own (schema, key)), so two library versions sharing one store
+    file never clobber each other's records;
   * stores stay bounded on long-lived machines: the JSONL format is
     last-line-wins, so :meth:`TuningStore.compact` rewrites the file keeping
     only the newest record per key — invoked automatically when a read sees
@@ -81,10 +84,18 @@ def sig_json(sig: tuple) -> str:
 
 
 def record_key(kind: str, struct_hash: str, sig: tuple,
-               fence: Optional[Mapping] = None) -> str:
+               fence: Optional[Mapping] = None, opts: str = "") -> str:
+    """Store key.  ``opts`` is a canonical token of the *search-shaping*
+    options (program-kind records only): a decision found by a narrower
+    search (``backends=("xla",)``, restricted ``levels``, ...) must never
+    answer a later full-space request, so the searched space is part of the
+    record's identity."""
     f = fence or runtime_fence()
-    return "|".join((kind, struct_hash, sig_json(sig),
-                     str(f["device"]), str(f["jax"])))
+    parts = [kind, struct_hash, sig_json(sig), str(f["device"]),
+             str(f["jax"])]
+    if opts:
+        parts.append(opts)
+    return "|".join(parts)
 
 
 #: auto-compaction threshold: when a load sees more raw lines than live
@@ -101,6 +112,9 @@ class TuningStore:
         self.path = Path(path)
         self.compact_threshold = compact_threshold
         self._records: dict = {}
+        # raw lines of *other* schema versions, preserved verbatim across
+        # rewrites (keyed by (schema, key) so stale duplicates still compact)
+        self._foreign: dict = {}
         self._raw_lines = 0  # physical lines last seen on disk
         self._stamp = object()  # never equals a real stat, forces first load
         self._lock = threading.Lock()
@@ -117,6 +131,7 @@ class TuningStore:
 
     def _load(self, stamp) -> None:
         records: dict = {}
+        foreign: dict = {}
         try:
             text = self.path.read_bytes().decode("utf-8", errors="replace")
         except OSError:
@@ -134,9 +149,20 @@ class TuningStore:
             if (not isinstance(rec, dict)
                     or rec.get("schema") != SCHEMA_VERSION
                     or not isinstance(rec.get("key"), str)):
-                continue  # wrong schema version (or malformed): ignored
+                # Other-schema records are invisible to this version but must
+                # survive rewrites: a newer (or older) library sharing the
+                # store file still owns them.  Keep the raw line verbatim,
+                # deduped by (schema, key) so compaction still collapses
+                # stale duplicates; truly malformed lines stay dropped.
+                if isinstance(rec, dict) and "schema" in rec:
+                    fk = (repr(rec.get("schema")),
+                          rec["key"] if isinstance(rec.get("key"), str)
+                          else f"#line{n_lines}")
+                    foreign[fk] = line  # later lines win
+                continue
             records[rec["key"]] = rec  # later lines win
         self._records = records
+        self._foreign = foreign
         self._raw_lines = n_lines
         self._stamp = stamp
 
@@ -154,7 +180,7 @@ class TuningStore:
         Never raises — a read must not be taken down by a failed rewrite."""
         if (self._compacting
                 or self._raw_lines <= self.compact_threshold
-                or self._raw_lines <= len(self._records)):
+                or self._raw_lines <= len(self._records) + len(self._foreign)):
             return
         try:
             self.compact()
@@ -200,6 +226,10 @@ class TuningStore:
                         prefix=self.path.name + ".", suffix=".tmp")
                     try:
                         with os.fdopen(fd, "w") as f:
+                            # other-schema lines first: they belong to other
+                            # library versions and must round-trip verbatim
+                            for line in self._foreign.values():
+                                f.write(line + "\n")
                             for r in merged.values():
                                 f.write(json.dumps(r, separators=(",", ":"))
                                         + "\n")
@@ -213,7 +243,7 @@ class TuningStore:
                             pass
                         raise
                     self._records = merged
-                    self._raw_lines = len(merged)
+                    self._raw_lines = len(merged) + len(self._foreign)
                     self._stamp = self._stat()
             finally:
                 if fcntl is not None:
@@ -250,7 +280,7 @@ class TuningStore:
             if self._stat() is None:
                 return 0  # no store on disk: never fabricate one
             self._maybe_reload()
-            if self._raw_lines <= len(self._records):
+            if self._raw_lines <= len(self._records) + len(self._foreign):
                 return 0  # one line per live key already
             removed = 0
 
@@ -259,7 +289,8 @@ class TuningStore:
                 # _raw_lines is the authoritative on-disk count (no second
                 # unlocked read, no racy arithmetic)
                 nonlocal removed
-                removed = max(0, self._raw_lines - len(merged))
+                removed = max(0, self._raw_lines - len(merged)
+                              - len(self._foreign))
 
             self._rewrite_locked(mutate)
         finally:
@@ -301,10 +332,12 @@ def plan_choice(key: str,
 
 
 def program_record(program_hash: str, sig: tuple,
-                   store: Optional[TuningStore] = None) -> Optional[dict]:
-    """The tuner's full decision record for one program + env signature."""
+                   store: Optional[TuningStore] = None,
+                   opts: str = "") -> Optional[dict]:
+    """The tuner's full decision record for one program + env signature +
+    search-options token (see :func:`record_key`)."""
     try:
         s = store if store is not None else default_store()
-        return s.get(record_key("program", program_hash, sig))
+        return s.get(record_key("program", program_hash, sig, opts=opts))
     except Exception:
         return None

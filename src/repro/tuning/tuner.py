@@ -16,6 +16,7 @@ than the static default up to measurement noise (pinned by tests and the
 """
 from __future__ import annotations
 
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Iterable, Mapping, Optional, Sequence
@@ -93,6 +94,17 @@ def _default_backend_for(plan, backends: Optional[Sequence[str]]) -> str:
     return b
 
 
+def _prefer_default(winner: Measurement, default_m: Optional[Measurement],
+                    default: Config, noise_margin: float) -> Measurement:
+    """The conservative tie rule, shared by the program-level pick and the
+    per-plan records: a non-default winner must beat the measured default by
+    more than ``noise_margin`` or the default is kept."""
+    if (default_m is not None and winner.config != default
+            and winner.us >= default_m.us * (1.0 - noise_margin)):
+        return default_m  # tie / inside noise: keep the static default
+    return winner
+
+
 def _pick(measurements: Sequence[Measurement], default: Config,
           noise_margin: float) -> tuple:
     """(winner Measurement, default Measurement|None) with tie fallback."""
@@ -105,11 +117,38 @@ def _pick(measurements: Sequence[Measurement], default: Config,
             f"autotune: no candidate survived the correctness gate "
             f"({details})")
     default_m = _find(ok, default)
-    winner = min(ok, key=lambda m: m.us)
-    if (default_m is not None and winner.config != default
-            and winner.us >= default_m.us * (1.0 - noise_margin)):
-        winner = default_m  # tie / inside noise: keep the static default
+    winner = _prefer_default(min(ok, key=lambda m: m.us), default_m,
+                             default, noise_margin)
     return winner, default_m
+
+
+def _opts_token(v):
+    """JSON-able view of one search option (non-JSON values — e.g. a cost
+    model instance in ``race_opts`` — degrade to their class name)."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, Mapping):
+        return {str(k): _opts_token(v[k]) for k in sorted(v, key=str)}
+    if isinstance(v, (list, tuple, set, frozenset)):
+        items = [_opts_token(x) for x in v]
+        return sorted(items, key=repr) if isinstance(
+            v, (set, frozenset)) else items
+    return type(v).__name__
+
+
+def search_signature(*, levels, backends, grid, quick, default_reassociate,
+                     rewrite_div, race_opts, tolerance,
+                     noise_margin) -> str:
+    """Canonical token of every option that shapes the candidate space or
+    the selection rule.  Part of the program-level store key: a decision
+    from a narrower search (say ``backends=("xla",)``) must not answer a
+    later full-space ``autotune`` call for the same program + env."""
+    return json.dumps(_opts_token(dict(
+        levels=sorted(set(levels)), backends=backends, grid=grid,
+        quick=quick, default_reassociate=default_reassociate,
+        rewrite_div=rewrite_div, race_opts=dict(race_opts or {}),
+        tolerance=tolerance, noise_margin=noise_margin,
+    )), sort_keys=True, separators=(",", ":"))
 
 
 def autotune(program: Program, env: Mapping, *,
@@ -125,8 +164,11 @@ def autotune(program: Program, env: Mapping, *,
     """Pick (and persist) the fastest correct config for ``program`` + ``env``.
 
     Consults the persistent store first: a record for this exact (program
-    hash, env signature, device kind, jax version) answers with zero
-    measurement (``from_cache=True``) unless ``force=True``.  Otherwise the
+    hash, env signature, device kind, jax version, search options) answers
+    with zero measurement (``from_cache=True``) unless ``force=True`` — the
+    search-shaping options (``levels``, ``backends``, ``grid``, ``quick``,
+    ``rewrite_div``, ...) are part of the key via :func:`search_signature`,
+    so a narrowed search never shadows a full one.  Otherwise the
     full space is measured — ``levels`` x eligible ``backends`` x the block
     ``grid`` — every candidate correctness-gated against the
     ``reassociate=0`` XLA baseline at the differential-harness ``tolerance``
@@ -138,14 +180,19 @@ def autotune(program: Program, env: Mapping, *,
     backend with the default block config — is always measured too, and wins
     ties within ``noise_margin``.
     """
+    grid = list(grid) if grid is not None else None
     sig = env_signature(env)
     s = store if store is not None else default_store()
     prog_h = program_hash(program)
     fence = runtime_fence()
-    key = record_key("program", prog_h, sig, fence)
+    search = search_signature(
+        levels=levels, backends=backends, grid=grid, quick=quick,
+        default_reassociate=default_reassociate, rewrite_div=rewrite_div,
+        race_opts=race_opts, tolerance=tolerance, noise_margin=noise_margin)
+    key = record_key("program", prog_h, sig, fence, opts=search)
 
     if not force:
-        rec = program_record(prog_h, sig, store=s)
+        rec = program_record(prog_h, sig, store=s, opts=search)
         if rec is not None and isinstance(rec.get("choice"), dict):
             stats = rec.get("stats") or {}
             return TuningDecision(
@@ -196,7 +243,8 @@ def autotune(program: Program, env: Mapping, *,
             n_gated=sum(m.status == "gated" for m in measurements),
             interpret=bool(interpret))
         s.put(dict(key=key, kind="program", hash=prog_h, device=fence["device"],
-                   jax=fence["jax"], choice=winner.config.as_dict(),
+                   jax=fence["jax"], search=search,
+                   choice=winner.config.as_dict(),
                    default=default.as_dict(), stats=stats))
         for lvl, plan in plans.items():
             level_ms = [m for m in measurements
@@ -204,11 +252,9 @@ def autotune(program: Program, env: Mapping, *,
             if not level_ms:
                 continue
             level_default = Config(lvl, _default_backend_for(plan, backends))
-            best = min(level_ms, key=lambda m: m.us)
             ld_m = _find(level_ms, level_default)
-            if (ld_m is not None and best.config != level_default
-                    and best.us >= ld_m.us * (1.0 - noise_margin)):
-                best = ld_m
+            best = _prefer_default(min(level_ms, key=lambda m: m.us), ld_m,
+                                   level_default, noise_margin)
             s.put(dict(
                 key=record_key("plan", plan_hash(plan), sig, fence),
                 kind="plan", hash=plan_hash(plan), device=fence["device"],

@@ -33,6 +33,9 @@ def pytest_configure(config):
                    "lowering engine (repro.lowering)")
     config.addinivalue_line(
         "markers", "tuning: exercises the repro.tuning autotuner subsystem")
+    config.addinivalue_line(
+        "markers", "grad: exercises differentiable RACE (the adjoint-stencil "
+                   "custom_vjp, repro.core.adjoint)")
 
 
 def pytest_collection_modifyitems(config, items):

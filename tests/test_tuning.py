@@ -145,11 +145,16 @@ def test_compact_keeps_newest_record_per_key(tmp_path):
     store = TuningStore(path)
     assert len(store) == 4  # live view already dedups (last line wins)
     removed = store.compact()
-    assert removed == 22 - 4
+    # the other-schema record survives the rewrite (only dup/garbage lines
+    # are reclaimed): 22 lines -> 4 live + 1 foreign
+    assert removed == 22 - 4 - 1
     on_disk = [json.loads(l) for l in path.read_text().splitlines()]
-    assert len(on_disk) == 4
-    assert {r["key"]: r["gen"] for r in on_disk} == {
+    assert len(on_disk) == 5
+    assert {r["key"]: r["gen"] for r in on_disk
+            if r["schema"] == SCHEMA_VERSION} == {
         f"k{k}": 4 for k in range(4)}
+    assert any(r["schema"] == SCHEMA_VERSION - 1 and r["key"] == "old"
+               for r in on_disk)
     # still a fully valid store afterwards
     assert TuningStore(path).get("k2")["gen"] == 4
 
@@ -471,6 +476,141 @@ def test_block_inner_differentially_correct(name, n, bi):
                       block_inner=bi)
     assert not report.failures()
     assert report.pallas_covered()
+
+
+# ---------------------------------------------------------------------------
+# regression pins for the five tuning-layer bugs (ISSUE 6)
+# ---------------------------------------------------------------------------
+
+
+def test_tune_on_esr_result_rebuilds_non_esr_target():
+    """Bug 1: ``RaceResult.tune()`` on an ``esr=True`` result used to forward
+    ``esr`` into the tuner's rebuilds, so the measured candidates (and the
+    applied winner) silently ran the every-statement-reuse *baseline* instead
+    of RACE proper.  The ESR flag is a comparison baseline, never a tuning
+    dimension: tune must rebuild a non-ESR target."""
+    case = _case()
+    env = build_env(case)
+    res = race(case.program, esr=True)
+    dec = res.tune(env, **QUICK)  # must not raise, must not measure ESR
+    assert dec.choice.backend == "xla"
+    ((_, target),) = res._tuned.values()
+    assert target.options["esr"] is False
+    assert target is not res
+    want = race(case.program, reassociate=dec.choice.reassociate).run(
+        env, "xla")
+    got = res.run(env)  # routed through the rebuilt non-ESR target
+    for k in want:
+        np.testing.assert_allclose(np.asarray(got[k], np.float64),
+                                   np.asarray(want[k], np.float64),
+                                   rtol=1e-4, err_msg=k)
+
+
+def test_run_batch_traceable_under_jit_and_grad():
+    """Bug 2: ``run_batch`` eagerly host-transferred the stacked batch to
+    build the tuning example (``np.asarray`` on a tracer), so any ``jit`` or
+    ``grad`` around it raised ``TracerArrayConversionError``.  The example
+    must be built lazily, only when a tune is actually triggered."""
+    import jax
+    import jax.numpy as jnp
+
+    case = _case("gaussian", 12)
+    res = race(case.program, reassociate=case.reassociate,
+               rewrite_div=case.rewrite_div)
+    env = build_env(case)
+    stacked = {k: jnp.stack([jnp.asarray(v)] * 3) for k, v in env.items()}
+    out = jax.jit(lambda s: res.run_batch(s, "xla"))(stacked)  # the pin
+    want = res.run(env, "xla")
+    for k in want:
+        np.testing.assert_allclose(np.asarray(out[k][0]), np.asarray(want[k]),
+                                   rtol=1e-6, err_msg=k)
+    # gradients flow through the batched path too
+    arr_key = next(k for k, v in env.items()
+                   if np.asarray(v).ndim and k in want)
+
+    def loss(s):
+        return jnp.sum(jnp.asarray(res.run_batch(s, "xla")[arr_key]))
+
+    g = jax.grad(lambda a: loss({**stacked, arr_key: a}))(stacked[arr_key])
+    assert np.isfinite(np.asarray(g)).all()
+
+
+def test_program_store_key_includes_search_options():
+    """Bug 3: the program-level store key ignored the search-shaping options,
+    so a narrowed search (``backends=("xla",)``, fewer levels, ...) recorded
+    a decision that silently answered later full-space requests."""
+    case = _case()
+    env = build_env(case)
+    d1 = autotune(case.program, env, levels=(0, 3), backends=None,
+                  repeats=2, warmup=1, quick=True)
+    assert not d1.from_cache
+    d2 = autotune(case.program, env, **QUICK)  # narrower: backends=("xla",)
+    assert not d2.from_cache  # must NOT be answered by the wider record
+    assert d2.key != d1.key
+    # both records persist independently and each re-hits its own search
+    assert autotune(case.program, env, levels=(0, 3), backends=None,
+                    repeats=2, warmup=1, quick=True).from_cache
+    assert autotune(case.program, env, **QUICK).from_cache
+
+
+def test_store_rewrites_preserve_foreign_schema_lines(tmp_path):
+    """Bug 4: ``put``/``compact`` rewrote the file from the current-schema
+    record view only, deleting every record owned by another library version
+    sharing the store file.  Foreign-schema lines must round-trip verbatim
+    (deduped by their own (schema, key))."""
+    path = tmp_path / "t.jsonl"
+    future_old = json.dumps(dict(schema=SCHEMA_VERSION + 1, key="f", gen=0))
+    future_new = json.dumps(dict(schema=SCHEMA_VERSION + 1, key="f", gen=1))
+    legacy = json.dumps(dict(schema=0, key="l", data="legacy"))
+    path.write_text("\n".join([future_old, future_new, legacy]) + "\n")
+    s = TuningStore(path)
+    assert len(s) == 0  # foreign records stay invisible to this version...
+    s.put(_rec("mine"))  # ...but a rewrite must not destroy them
+    on_disk = [json.loads(x) for x in path.read_text().splitlines()]
+    by_schema_key = {(r["schema"], r["key"]): r for r in on_disk}
+    assert (SCHEMA_VERSION + 1, "f") in by_schema_key
+    assert by_schema_key[(SCHEMA_VERSION + 1, "f")]["gen"] == 1  # deduped
+    assert (0, "l") in by_schema_key
+    assert (SCHEMA_VERSION, "mine") in by_schema_key
+    assert len(on_disk) == 3
+    # compaction keeps them too, and doesn't loop re-removing them
+    assert s.compact() == 0
+    assert TuningStore(path).get("mine") is not None
+    assert len(path.read_text().splitlines()) == 3
+
+
+def test_noise_margin_tie_rule_shared_by_program_and_plan_records():
+    """Bug 5: the noise-margin tie fallback was duplicated between ``_pick``
+    and the per-plan record loop (and had started to drift).  Both sites now
+    share ``_prefer_default``: with a total noise margin every winner ties,
+    so the program record AND every plan record must keep their defaults."""
+    from repro.core.executor import env_signature, plan_hash
+    from repro.tuning.measure import Measurement
+    from repro.tuning.space import Config
+    from repro.tuning.tuner import _prefer_default
+
+    # the helper itself: beat-the-margin wins, tie keeps default
+    fast = Measurement(Config(3, "xla"), "ok", us=50.0)
+    dflt = Measurement(Config(0, "xla"), "ok", us=100.0)
+    close = Measurement(Config(3, "xla"), "ok", us=99.0)
+    assert _prefer_default(fast, dflt, dflt.config, 0.03) is fast
+    assert _prefer_default(close, dflt, dflt.config, 0.03) is dflt
+    assert _prefer_default(fast, None, dflt.config, 0.03) is fast
+
+    # both call sites, end to end: noise_margin=1.0 makes every tie
+    case = _case()
+    env = build_env(case)
+    dec = autotune(case.program, env, noise_margin=1.0, **QUICK)
+    assert dec.choice == dec.default
+    sig = env_signature(env)
+    s = default_store()
+    for lvl in (0, 3):
+        res = race(case.program, reassociate=lvl)
+        rec = s.get(record_key("plan", plan_hash(res.plan), sig,
+                               runtime_fence()))
+        if rec is not None:  # per-plan record: same conservative rule
+            assert rec["choice"]["backend"] == "xla"
+            assert rec["choice"]["reassociate"] == lvl
 
 
 @pytest.mark.pallas
