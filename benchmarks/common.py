@@ -58,3 +58,51 @@ def time_fn(fn, env, repeats: int = 5, warmup: int = 2):
 
 def csv_line(name: str, us: float, derived: str) -> str:
     return f"{name},{us:.2f},{derived}"
+
+
+def bench_stamp() -> dict:
+    """Provenance stamp for machine-readable benchmark output.
+
+    One source of truth shared by ``BENCH_*.json`` (run.py / serving.py /
+    tuning.py / grad.py), ``launch/serve.py --json`` and the observability
+    dumps: schema version, UTC timestamp, device/backend string, jax
+    version — so perf-trajectory artifacts from different commits and
+    machines are comparable without guessing.
+    """
+    from repro.obs import run_stamp
+
+    return run_stamp()
+
+
+def section_main(section: str, run_fn, argv=None) -> None:
+    """Shared ``python -m benchmarks.<section>`` entry point.
+
+    ``--quick`` shrinks the sweep, ``--compiled`` drops interpret mode,
+    ``--json [PATH]`` writes the stamped structured rows (default
+    ``BENCH_<section>.json``).  With ``RACE_OBS=1`` the accumulated metrics
+    + event snapshot lands in ``OBS_metrics.json``.
+    """
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(description=f"{section} benchmark")
+    ap.add_argument("--quick", action="store_true", help="smaller sweep")
+    ap.add_argument("--compiled", action="store_true",
+                    help="pallas rows compiled (interpret=False; needs TPU)")
+    ap.add_argument("--json", nargs="?", const=f"BENCH_{section}.json",
+                    default=None, metavar="PATH",
+                    help="write stamped structured rows")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    rows = run_fn(quick=args.quick, interpret=not args.compiled)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(dict(stamp=bench_stamp(), section=section,
+                           rows=rows), f, indent=1, default=str)
+        print(csv_line(f"json.{section}", 0.0, f"wrote={args.json}"))
+    from repro import obs
+
+    if obs.enabled():
+        obs.dump("OBS_metrics.json")
+        print(csv_line("obs", 0.0, "wrote=OBS_metrics.json"))

@@ -106,3 +106,9 @@ def run(print_fn=print, quick: bool = False, repeats: int = None,
             f"reduced_ops={adj_reduced:.2f} "
             f"reuse_hit_rate={hit_rate:.2f}"))
     return rows
+
+
+if __name__ == "__main__":
+    from .common import section_main
+
+    section_main("grad", run)

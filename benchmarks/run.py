@@ -103,14 +103,23 @@ def main() -> None:
         try:
             rows = fn()
             if args.json and rows is not None:
+                from .common import bench_stamp
+
                 path = f"BENCH_{name}.json"
+                doc = dict(stamp=bench_stamp(), section=name,
+                           rows=_jsonable(rows))
                 with open(path, "w") as f:
-                    json.dump(_jsonable(rows), f, indent=1, default=str)
+                    json.dump(doc, f, indent=1, default=str)
                 print(f"json.{name},0.00,wrote={path}")
         except Exception as e:  # keep the harness going; report at the end
             failures += 1
             print(f"{name},0.00,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
+    from repro import obs
+
+    if obs.enabled():
+        obs.dump("OBS_metrics.json")
+        print("obs,0.00,wrote=OBS_metrics.json")
     print(f"done,0.00,sections_failed={failures}")
     if failures:
         raise SystemExit(1)

@@ -24,6 +24,7 @@ import numpy as np
 
 import jax
 
+from repro import obs
 from repro.apps.paper_kernels import get_case
 from repro.core.backend import select_backend
 from repro.core.executor import compile_plan, executor_cache, plan_hash
@@ -83,9 +84,33 @@ def _bench_backend(res, case, backend, repeats, batch, interpret,
     )
 
 
+def _span_delta(before: dict, after: dict) -> dict:
+    """Per-span {count, total_s} recorded between two ``obs.span_summary()``
+    snapshots — the telemetry breakdown of one benchmark row."""
+    out = {}
+    for span, agg in after.items():
+        prev = before.get(span, {"count": 0, "total_s": 0.0})
+        d_count = agg["count"] - prev["count"]
+        if d_count > 0:
+            out[span] = dict(count=d_count,
+                             total_s=agg["total_s"] - prev["total_s"])
+    return out
+
+
+def _span_tag(spans: dict) -> str:
+    return "|".join(f"{k}:{v['count']}x{v['total_s'] * 1e6 / v['count']:.0f}us"
+                    for k, v in sorted(spans.items()))
+
+
 def run(print_fn=print, quick: bool = False, repeats: int = None,
         batch: int = None, interpret: bool = True):
-    """Returns one row per (case, backend); CSV is printed en route."""
+    """Returns one row per (case, backend); CSV is printed en route.
+
+    With ``RACE_OBS=1`` each row carries a ``spans`` breakdown — the
+    per-phase (lower/compile/run/...) count and wall time recorded while
+    that row executed — and a case that records *no* pipeline spans is a
+    hard error: the instrumentation regressed, not the benchmark.
+    """
     repeats = repeats or (5 if quick else 20)
     batch = batch or (4 if quick else 8)
     rows = []
@@ -97,6 +122,7 @@ def run(print_fn=print, quick: bool = False, repeats: int = None,
         if select_backend(res.plan, "auto").backend == "pallas":
             backends.append("pallas")
         for backend in backends:
+            spans0 = obs.span_summary() if obs.enabled() else {}
             row = _bench_backend(res, case, backend, repeats, batch,
                                  interpret)
             derived = (f"cold_ms={row['cold_ms']:.1f}"
@@ -107,11 +133,52 @@ def run(print_fn=print, quick: bool = False, repeats: int = None,
                        f"{row['batch_us_per_item']:.1f}"
                        f";batch_ips={row['batch_ips']:.0f}"
                        f";cfg={Config.from_dict(row['config']).describe()}")
+            if obs.enabled():
+                spans = _span_delta(spans0, obs.span_summary())
+                if not spans:
+                    raise AssertionError(
+                        f"serving.{name}.{backend}: RACE_OBS=1 but the case "
+                        f"emitted zero pipeline spans — instrumentation "
+                        f"regressed")
+                row["spans"] = spans
+                derived += f";spans={_span_tag(spans)}"
             print_fn(csv_line(f"serving.{name}.{backend}",
                               row["us_per_call"], derived))
             rows.append(row)
     return rows
 
 
+def main(argv=None) -> None:
+    import argparse
+    import json
+
+    ap = argparse.ArgumentParser(
+        description="executor-cache serving benchmark")
+    ap.add_argument("--quick", action="store_true", help="smaller sweep")
+    ap.add_argument("--repeats", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--compiled", action="store_true",
+                    help="pallas rows compiled (interpret=False; needs TPU)")
+    ap.add_argument("--json", nargs="?", const="BENCH_serving.json",
+                    default=None, metavar="PATH",
+                    help="write stamped structured rows (default "
+                         "BENCH_serving.json)")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    rows = run(quick=args.quick, repeats=args.repeats, batch=args.batch,
+               interpret=not args.compiled)
+    if args.json:
+        from .common import bench_stamp
+
+        with open(args.json, "w") as f:
+            json.dump(dict(stamp=bench_stamp(), section="serving",
+                           rows=rows), f, indent=1, default=str)
+        print(csv_line("json.serving", 0.0, f"wrote={args.json}"))
+    if obs.enabled():
+        obs.dump("OBS_metrics.json")
+        print(csv_line("obs", 0.0, "wrote=OBS_metrics.json"))
+
+
 if __name__ == "__main__":
-    run()
+    main()

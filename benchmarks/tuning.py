@@ -94,4 +94,6 @@ def run(print_fn=print, quick: bool = False, repeats: int = None,
 
 
 if __name__ == "__main__":
-    run()
+    from .common import section_main
+
+    section_main("tuning", run)

@@ -60,6 +60,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
+
 from .ir import (Const, Expr, FuncName, Loop, Node, Program, Ref, Stmt, Sub,
                  expr_refs, map_expr)
 
@@ -571,9 +573,21 @@ def adjoint_build(program: Program) -> AdjointBuild:
     if b is not None:
         return b
     try:
-        b = _build(program)
+        with _obs.span("adjoint_build", program=h):
+            b = _build(program)
+        if _obs.enabled():
+            _obs.counter("race_adjoint_builds_total",
+                         outcome="supported").inc()
     except AdjointUnsupported as e:
         b = AdjointBuild(program, [], reason=str(e))
+        # the refusal is a pipeline decision: emitted once per program (the
+        # build is memoized), with the structured reason code the backward
+        # pass will fall back to autodiff under
+        if _obs.enabled():
+            _obs.counter("race_adjoint_builds_total",
+                         outcome="refused").inc()
+            _obs.event("adjoint_refusal", program=h, reason=e.reason,
+                       detail=e.detail)
     with _builds_lock:
         _builds[h] = b
     return b
@@ -680,14 +694,23 @@ def backward(program: Program, env: Mapping, g: Mapping, *,
     ``g`` maps output names to cotangents.  Returns a full-env gradient
     dict (float0 zeros for integer leaves, zeros for unread arrays)."""
     if adjoint_mode() == "autodiff":
+        if _obs.enabled():
+            _obs.counter("race_adjoint_backward_total",
+                         mode="autodiff-forced").inc()
         return _autodiff_backward(program, env, g)
     build = adjoint_build(program)
     if not build.ok:
+        if _obs.enabled():
+            _obs.counter("race_adjoint_backward_total",
+                         mode="autodiff-fallback").inc()
         return _autodiff_backward(program, env, g)
-    grads = {}
-    for spec in build.specs:
-        grads[spec.input] = _run_spec(spec, env, g, interpret=interpret,
-                                      backend=backend)
+    with _obs.span("adjoint_backward"):
+        grads = {}
+        for spec in build.specs:
+            grads[spec.input] = _run_spec(spec, env, g, interpret=interpret,
+                                          backend=backend)
+    if _obs.enabled():
+        _obs.counter("race_adjoint_backward_total", mode="stencil").inc()
     return {k: (grads[k] if k in grads else _zero_cotangent(v))
             for k, v in env.items()}
 

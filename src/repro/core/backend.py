@@ -33,6 +33,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+from repro import obs as _obs
 from repro.lowering.facts import (  # noqa: F401  (stable re-exports)
     FALLBACK_CODES, RETIRED_CODES, R_CONSTANT_DIM, R_DEPTH,
     R_FRACTIONAL_OFFSET, R_INCONSISTENT_LAYOUT, R_LHS_FORM, R_MIXED_STRIDE,
@@ -121,6 +122,35 @@ def select_backend(plan: Plan, requested: str = "auto") -> Selection:
         return Selection("xla", requested, cap)
     if requested == "pallas":
         if not cap.eligible:
+            _emit_selection(plan, requested, "unavailable", cap)
             raise BackendUnavailable(cap)
-        return Selection("pallas", requested, cap)
-    return Selection("pallas" if cap.eligible else "xla", requested, cap)
+        return _emit_selection(plan, requested, "pallas", cap)
+    return _emit_selection(
+        plan, requested, "pallas" if cap.eligible else "xla", cap)
+
+
+def _emit_selection(plan: Plan, requested: str, backend: str,
+                    cap: Capability):
+    """Record the probe's verdict: a counter per (requested, resolved) pair,
+    a ``backend_fallback`` event carrying the structured reasons whenever a
+    Pallas-wanting request lands on XLA (or is refused outright), and a
+    ``lowering_facts`` event when an eligible plan engages envelope-widening
+    mechanisms — the decisions the capability matrix is built from."""
+    if _obs.enabled():
+        from .executor import plan_hash
+
+        ph = plan_hash(plan)
+        _obs.counter("race_backend_selections_total", requested=requested,
+                     backend=backend).inc()
+        if backend in ("xla", "unavailable") and cap.reasons:
+            _obs.event("backend_fallback", plan=ph, requested=requested,
+                       backend=backend,
+                       reasons=[str(r) for r in cap.reasons],
+                       codes=[r.code for r in cap.reasons])
+        elif cap.facts:
+            _obs.event("lowering_facts", plan=ph, backend=backend,
+                       facts=[str(f) for f in cap.facts],
+                       codes=[f.code for f in cap.facts])
+    if backend == "unavailable":
+        return None
+    return Selection(backend, requested, cap)

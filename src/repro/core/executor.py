@@ -48,6 +48,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro import obs as _obs
+
 from .backend import BACKENDS, Selection, select_backend
 from .depgraph import Plan
 from .ir import Const, Expr, FuncName, Node, Program, Ref
@@ -251,25 +253,27 @@ class CompiledRace:
         self._out_names = frozenset(st.lhs.name for st in plan.body)
         self._batch_lock = threading.Lock()
         self._batch_jit = None
+        self._plan_h = plan_hash(plan)
 
-        if self.backend == "pallas":
-            from repro.lowering import specialize_stencil
+        with _obs.span("lower", plan=self._plan_h, backend=self.backend):
+            if self.backend == "pallas":
+                from repro.lowering import specialize_stencil
 
-            self.spec = specialize_stencil(
-                plan,
-                {nm: shp for nm, shp, *_ in env_sig},
-                {nm: np.dtype(dt) for nm, _, dt, *_ in env_sig},
-                block_rows=block_rows, block_cols=block_cols,
-                interpret=interpret, block_inner=block_inner)
-            core = self.spec.apply
-        else:
-            from repro.kernels.ref import interior
+                self.spec = specialize_stencil(
+                    plan,
+                    {nm: shp for nm, shp, *_ in env_sig},
+                    {nm: np.dtype(dt) for nm, _, dt, *_ in env_sig},
+                    block_rows=block_rows, block_cols=block_cols,
+                    interpret=interpret, block_inner=block_inner)
+                core = self.spec.apply
+            else:
+                from repro.kernels.ref import interior
 
-            from .codegen import build_plan_evaluator
+                from .codegen import build_plan_evaluator
 
-            self.spec = None
-            plan_run = build_plan_evaluator(plan)
-            core = lambda env: interior(plan, plan_run(env))  # noqa: E731
+                self.spec = None
+                plan_run = build_plan_evaluator(plan)
+                core = lambda env: interior(plan, plan_run(env))  # noqa: E731
         self._core = core
 
         # differentiability: wrap the core in a custom_vjp whose backward
@@ -303,7 +307,16 @@ class CompiledRace:
         """Execute on the compiled path; returns interior-convention outputs."""
         self.calls += 1
         ins, outs = self._split(env)
-        return self._jit(ins, outs)
+        if not _obs.enabled():  # the RACE_OBS=0 fast path: one flag read
+            return self._jit(ins, outs)
+        # first call pays trace + XLA compile inside the jit dispatch — that
+        # is the "compile" span; every later call is steady-state "run"
+        phase = "compile" if self.calls == 1 else "run"
+        with _obs.span(phase, plan=self._plan_h, backend=self.backend):
+            out = self._jit(ins, outs)
+        _obs.counter("race_executor_runs_total", plan=self._plan_h,
+                     backend=self.backend).inc()
+        return out
 
     __call__ = run
 
@@ -336,7 +349,15 @@ class CompiledRace:
 
                     self._batch_jit = jax.jit(jax.vmap(_bcall))
         self.batch_calls += 1
-        return self._batch_jit(stacked)
+        if not _obs.enabled():
+            return self._batch_jit(stacked)
+        phase = "compile" if self.batch_calls == 1 else "run"
+        with _obs.span(phase, plan=self._plan_h, backend=self.backend,
+                       batch="1"):
+            out = self._batch_jit(stacked)
+        _obs.counter("race_executor_batch_runs_total", plan=self._plan_h,
+                     backend=self.backend).inc()
+        return out
 
     # -- introspection ------------------------------------------------------
 
@@ -393,18 +414,39 @@ class ExecutorCache:
 
     def get_or_build(self, key: ExecutorKey,
                      builder: Callable[[], CompiledRace]) -> CompiledRace:
+        hit = True
+        evicted = []
         with self._lock:
             ex = self._entries.get(key)
             if ex is not None:
                 self._entries.move_to_end(key)
                 self.stats.hits += 1
-                return ex
-            self.stats.misses += 1
-            ex = self._entries[key] = builder()
-            while len(self._entries) > self.maxsize:
-                self._entries.popitem(last=False)
-                self.stats.evictions += 1
-            return ex
+            else:
+                hit = False
+                self.stats.misses += 1
+                ex = self._entries[key] = builder()
+                while len(self._entries) > self.maxsize:
+                    old_key, _ = self._entries.popitem(last=False)
+                    evicted.append(old_key)
+                    self.stats.evictions += 1
+        # telemetry outside the lock: the JSONL event sink does file I/O and
+        # must not serialize concurrent cache lookups
+        if _obs.enabled():
+            _obs.counter("race_executor_cache_total",
+                         event="hit" if hit else "miss",
+                         plan=key.plan).inc()
+            if not hit:
+                _obs.event("executor_build", plan=key.plan,
+                           backend=key.backend, donate=key.donate,
+                           blocks=key.blocks)
+            for old in evicted:
+                _obs.counter("race_executor_cache_total", event="evict",
+                             plan=old.plan).inc()
+                _obs.event("executor_evict", plan=old.plan,
+                           backend=old.backend,
+                           currsize=len(self._entries),
+                           maxsize=self.maxsize)
+        return ex
 
     def clear(self) -> None:
         with self._lock:
@@ -446,11 +488,19 @@ def clear_cache() -> None:
 
 def configure_cache(maxsize: int) -> None:
     """Resize the process-wide cache (evicts LRU entries if shrinking)."""
+    evicted = []
     with _CACHE._lock:
         _CACHE.maxsize = maxsize
         while len(_CACHE._entries) > maxsize:
-            _CACHE._entries.popitem(last=False)
+            old_key, _ = _CACHE._entries.popitem(last=False)
+            evicted.append(old_key)
             _CACHE.stats.evictions += 1
+    if _obs.enabled():
+        for old in evicted:
+            _obs.counter("race_executor_cache_total", event="evict",
+                         plan=old.plan).inc()
+            _obs.event("executor_evict", plan=old.plan, backend=old.backend,
+                       currsize=len(_CACHE._entries), maxsize=maxsize)
 
 
 # ---------------------------------------------------------------------------

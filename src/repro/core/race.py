@@ -19,6 +19,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Optional
 
+from repro import obs as _obs
+
 from . import analysis
 from .backend import BACKENDS, Capability, Selection, probe_pallas, select_backend
 from .codegen import build_baseline_evaluator, build_plan_evaluator
@@ -236,6 +238,42 @@ class RaceResult:
             donate=donate)
         return ex.run_batch(envs)
 
+    # --- observability ------------------------------------------------------
+    def telemetry(self) -> dict:
+        """Everything observable about this result in one dict: structural
+        identities (program/plan hashes), the static analysis verdicts
+        (reduced-ops fraction, auxiliary counts, capability probe), the
+        process-wide executor-cache stats, and — when ``RACE_OBS=1`` — the
+        metrics series and decision events carrying this plan's hash.
+
+        This is the per-result view of the process-wide telemetry in
+        :mod:`repro.obs`; serving dashboards and the benchmarks read it
+        instead of poking at internals."""
+        from .executor import executor_cache, plan_hash, program_hash
+
+        ph = plan_hash(self.plan)
+        cap = self.capability()
+        out = dict(
+            program=program_hash(self.program),
+            plan=ph,
+            options={k: v for k, v in self.options.items()
+                     if isinstance(v, (bool, int, float, str))},
+            reduced_ops=self.reduced_ops(),
+            n_aux=self.n_aux(),
+            n_aux_materialized=self.n_aux_materialized(),
+            rounds=self.rounds(),
+            capability=dict(eligible=cap.eligible,
+                            reasons=[str(r) for r in cap.reasons],
+                            facts=[str(f) for f in cap.facts]),
+            executor_cache=executor_cache().cache_info(),
+            obs_enabled=_obs.enabled(),
+        )
+        if _obs.enabled():
+            out["metrics"] = _obs.snapshot(label_filter={"plan": ph})
+            out["events"] = [e for e in _obs.events()
+                             if e.get("plan") == ph]
+        return out
+
     # --- pretty ------------------------------------------------------------
     def to_source(self) -> str:
         vn = {l.level: l.var for l in self.program.loops}
@@ -297,27 +335,39 @@ def race(
     if reassociate and esr:
         # ESR+ = ESR with reassociation (paper's strongest baseline)
         pass
-    if reassociate:
-        from .nary import detect_nary
+    with _obs.span("detect", reassociate=str(reassociate)):
+        if reassociate:
+            from .nary import detect_nary
 
-        transformed = detect_nary(
-            program,
-            level=reassociate,
-            cost_model=cost_model or PaperCost(),
-            rewrite_sub=rewrite_sub,
-            rewrite_div=rewrite_div,
-            max_rounds=max_rounds,
-            restrict_innermost=esr,
-            mis_exact_limit=mis_exact_limit,
-        )
-    else:
-        transformed = detect_binary(
-            program,
-            cost_model=cost_model or PaperCost(),
-            max_rounds=max_rounds,
-            restrict_innermost=esr,
-        )
-    plan = finalize(transformed, contraction=contraction)
+            transformed = detect_nary(
+                program,
+                level=reassociate,
+                cost_model=cost_model or PaperCost(),
+                rewrite_sub=rewrite_sub,
+                rewrite_div=rewrite_div,
+                max_rounds=max_rounds,
+                restrict_innermost=esr,
+                mis_exact_limit=mis_exact_limit,
+            )
+        else:
+            transformed = detect_binary(
+                program,
+                cost_model=cost_model or PaperCost(),
+                max_rounds=max_rounds,
+                restrict_innermost=esr,
+            )
+    with _obs.span("contract"):
+        plan = finalize(transformed, contraction=contraction)
+    if _obs.enabled():
+        from .executor import plan_hash, program_hash
+
+        _obs.counter("race_builds_total",
+                     reassociate=str(reassociate)).inc()
+        _obs.gauge("race_reduced_ops", program=program_hash(program),
+                   plan=plan_hash(plan)).set(
+            analysis.reduced_ops_fraction(program, plan))
+        _obs.gauge("race_aux_materialized", plan=plan_hash(plan)).set(
+            len(plan.aux_order))
     return RaceResult(
         program,
         plan,

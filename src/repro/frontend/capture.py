@@ -505,5 +505,23 @@ def capture(fn: Callable, shapes: Mapping[str, tuple],
     capturable scope, or ``ValueError`` for API misuse (missing shapes,
     sourceless functions).
     """
+    from repro import obs
+
     fn = getattr(fn, "fn", fn)  # unwrap a RaceKernel
-    return _Capturer(fn, shapes, consts).run()
+    try:
+        with obs.span("capture", function=getattr(fn, "__name__", "?")):
+            prog = _Capturer(fn, shapes, consts).run()
+    except CaptureError as e:
+        # every rejection is a pipeline decision: the stable diagnostic
+        # code (13-code vocabulary) becomes a counter + structured event
+        if obs.enabled():
+            d = e.diagnostic
+            obs.counter("race_frontend_diagnostics_total",
+                        code=d.code).inc()
+            obs.event("frontend_diagnostic", code=d.code,
+                      message=d.message, line=d.line, col=d.col,
+                      file=d.file, function=d.function)
+        raise
+    if obs.enabled():
+        obs.counter("race_frontend_captures_total").inc()
+    return prog

@@ -19,6 +19,11 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--json", nargs="?", const="-", default=None,
+                    metavar="PATH",
+                    help="structured output: per-step decode latencies, "
+                         "percentiles, tokens/s, provenance stamp — to "
+                         "stdout ('-', the default) or PATH")
     args = ap.parse_args()
 
     import numpy as np
@@ -55,10 +60,14 @@ def main():
     prefill_s = time.time() - t0
 
     generated = []
+    # --json wants true per-step latency, so each step must block; the
+    # default path keeps the async dispatch pipeline (throughput numbers)
+    step_lat = [] if args.json else None
     tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
     t0 = time.time()
     for t in range(args.prompt_len, max_len):
         generated.append(np.asarray(tok)[:, 0])
+        t1 = time.perf_counter()
         logits, caches = step(params, caches, tok, jnp.int32(t))
         if args.temperature > 0:
             key, sub = jax.random.split(key)
@@ -66,14 +75,40 @@ def main():
                 sub, logits / args.temperature)[:, None].astype(jnp.int32)
         else:
             tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        if step_lat is not None:
+            jax.block_until_ready(tok)
+            step_lat.append(time.perf_counter() - t1)
     decode_s = time.time() - t0
     gen = np.stack(generated, 1)
-    print(json.dumps({
+    doc = {
         "arch": cfg.name, "batch": args.batch,
         "prefill_tok_s": round(args.batch * args.prompt_len / prefill_s, 1),
         "decode_tok_s": round(args.batch * args.gen / decode_s, 1),
         "sample_tokens": gen[0][:8].tolist(),
-    }))
+    }
+    if args.json:
+        from repro.obs import run_stamp
+
+        lat_us = sorted(s * 1e6 for s in step_lat)
+        pick = lambda q: lat_us[min(len(lat_us) - 1,  # noqa: E731
+                                    int(q * len(lat_us)))]
+        doc.update(
+            stamp=run_stamp(), reduced=bool(args.reduced),
+            prompt_len=args.prompt_len, gen=args.gen,
+            prefill_s=round(prefill_s, 4), decode_s=round(decode_s, 4),
+            step_latency_us=[round(s * 1e6, 1) for s in step_lat],
+            step_p50_us=round(pick(0.50), 1),
+            step_p90_us=round(pick(0.90), 1),
+        )
+        out = json.dumps(doc, indent=1)
+        if args.json == "-":
+            print(out)
+        else:
+            with open(args.json, "w") as f:
+                f.write(out + "\n")
+            print(f"wrote {args.json}")
+    else:
+        print(json.dumps(doc))
 
 
 if __name__ == "__main__":

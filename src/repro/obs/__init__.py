@@ -1,0 +1,235 @@
+"""RACE observability: metrics, spans, and structured decision events.
+
+One process-wide state (registry + event log) behind a single enabled flag:
+
+    RACE_OBS=1            enable instrumentation (default: off)
+    RACE_OBS_EVENTS=PATH  also append decision events to a JSONL file
+    RACE_OBS_RING=N       in-memory event ring capacity (default 4096)
+
+Public surface (every call is safe — and near-free — when disabled):
+
+    obs.enabled()                  -> bool (one attribute read)
+    obs.span("detect", **labels)   -> context manager timing a phase
+    obs.event("kind", **fields)    -> structured decision event
+    obs.counter/gauge/histogram()  -> registry series (get-or-create)
+    obs.snapshot(label_filter=..)  -> plain-dict metrics view (+ events)
+    obs.render_prometheus()        -> Prometheus text exposition
+    obs.dump(path)                 -> {"stamp", "metrics", "events"} JSON
+    obs.configure(...) / reset()   -> programmatic control / re-read env
+
+Design rule, mirrored from the capability probe's "never silent" contract:
+every decision the pipeline computes — fallback reasons, refusals,
+diagnostics, gate verdicts, cache evictions — is *emitted*, not discarded,
+the moment observability is on.  The disabled path is a no-op by
+construction: ``span`` returns a shared no-op object, ``event`` and the
+metric helpers return before building anything, so serving pays one boolean
+attribute read per call site.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+
+from .events import DEFAULT_RING, EventLog, load_jsonl
+from .metrics import DEFAULT_BUCKETS, Counter, Gauge, Histogram, Registry
+from .spans import NOOP_SPAN, Span, current_path
+
+__all__ = [
+    "enabled", "configure", "reset", "span", "event", "events",
+    "counter", "gauge", "histogram", "metrics", "event_log",
+    "snapshot", "span_summary", "render_prometheus", "render_json",
+    "dump", "run_stamp", "current_path", "load_jsonl",
+    "Registry", "Counter", "Gauge", "Histogram", "EventLog",
+    "DEFAULT_BUCKETS", "DEFAULT_RING",
+    "ENV_OBS", "ENV_EVENTS", "ENV_RING", "OBS_SCHEMA",
+]
+
+ENV_OBS = "RACE_OBS"
+ENV_EVENTS = "RACE_OBS_EVENTS"
+ENV_RING = "RACE_OBS_RING"
+
+#: schema version stamped on dumps and benchmark JSON artifacts
+OBS_SCHEMA = 1
+
+_TRUTHY = ("1", "true", "yes", "on")
+
+
+def _env_enabled() -> bool:
+    return os.environ.get(ENV_OBS, "").strip().lower() in _TRUTHY
+
+
+def _env_ring() -> int:
+    raw = os.environ.get(ENV_RING, "").strip()
+    if not raw:
+        return DEFAULT_RING
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        raise ValueError(f"{ENV_RING}={raw!r} is not an integer") from None
+
+
+class _State:
+    """The process-wide observability state (swapped atomically on reset)."""
+
+    __slots__ = ("enabled", "registry", "events")
+
+    def __init__(self, enabled: bool, registry: Registry, events: EventLog):
+        self.enabled = enabled
+        self.registry = registry
+        self.events = events
+
+
+_lock = threading.Lock()
+_state = _State(_env_enabled(), Registry(),
+                EventLog(_env_ring(),
+                         os.environ.get(ENV_EVENTS, "").strip() or None))
+
+
+def enabled() -> bool:
+    """Is instrumentation on?  The per-call cost of every disabled site."""
+    return _state.enabled
+
+
+def configure(enabled=None, events_path=..., ring=None) -> None:
+    """Programmatic control (overrides the env): flip the flag, point the
+    JSONL sink somewhere (``None`` detaches it), resize the ring.  Metric
+    and event state is *kept* — use :func:`reset` for a clean slate."""
+    global _state
+    with _lock:
+        st = _state
+        new_enabled = st.enabled if enabled is None else bool(enabled)
+        ev = st.events
+        if events_path is not ... or ring is not None:
+            old = ev
+            ev = EventLog(ring if ring is not None else old._ring.maxlen,
+                          (old.sink_path if events_path is ...
+                           else (str(events_path) if events_path else None)))
+            for e in old.events():  # carry history across sink swaps
+                ev._ring.append(e)
+                ev._seq = max(ev._seq, e.get("seq", 0))
+            old.close()
+        _state = _State(new_enabled, st.registry, ev)
+
+
+def reset() -> None:
+    """Fresh registry + event log, enabled flag re-read from the env.
+    Test isolation and long-lived-process rollover both go through here."""
+    global _state
+    with _lock:
+        _state.events.close()
+        _state = _State(_env_enabled(), Registry(),
+                        EventLog(_env_ring(),
+                                 os.environ.get(ENV_EVENTS, "").strip()
+                                 or None))
+
+
+# -- instrumentation front doors (cheap when disabled) -----------------------
+
+
+def span(name: str, **labels):
+    """Time a phase: ``with obs.span("detect"): ...``.  Disabled -> a shared
+    no-op context manager (no allocation, no clock read)."""
+    st = _state
+    if not st.enabled:
+        return NOOP_SPAN
+    return Span(name, st.registry, labels)
+
+
+def event(kind: str, **fields):
+    """Emit one structured decision event (ring + optional JSONL sink).
+    Disabled -> returns None without building anything."""
+    st = _state
+    if not st.enabled:
+        return None
+    return st.events.emit(kind, **fields)
+
+
+def counter(name: str, **labels) -> Counter:
+    return _state.registry.counter(name, **labels)
+
+
+def gauge(name: str, **labels) -> Gauge:
+    return _state.registry.gauge(name, **labels)
+
+
+def histogram(name: str, edges=DEFAULT_BUCKETS, **labels) -> Histogram:
+    return _state.registry.histogram(name, edges, **labels)
+
+
+def metrics() -> Registry:
+    """The live registry (callers should prefer the helpers above)."""
+    return _state.registry
+
+
+def event_log() -> EventLog:
+    return _state.events
+
+
+def events(kind=None) -> list:
+    return _state.events.events(kind)
+
+
+# -- read side ---------------------------------------------------------------
+
+
+def snapshot(label_filter=None, include_events: bool = False) -> dict:
+    """Metrics snapshot (optionally filtered to series carrying every
+    ``label_filter`` pair); ``include_events`` adds the event ring."""
+    st = _state
+    out = st.registry.snapshot(label_filter)
+    out["event_counts"] = st.events.counts()
+    if include_events:
+        out["events"] = st.events.events()
+    return out
+
+
+def span_summary() -> dict:
+    """``{span: {"count": n, "total_s": s}}`` — the compact phase breakdown
+    benchmark rows are annotated with."""
+    return _state.registry.span_summary()
+
+
+def render_prometheus() -> str:
+    return _state.registry.render_prometheus()
+
+
+def render_json(label_filter=None) -> str:
+    return _state.registry.render_json(label_filter)
+
+
+def run_stamp() -> dict:
+    """Identity stamp for machine-readable artifacts: schema version, UTC
+    timestamp, device/backend string, jax version.  Shared by ``obs.dump``,
+    every ``BENCH_*.json``, and ``launch/serve.py --json`` so artifact
+    trajectories are diffable across runs and machines."""
+    import datetime
+
+    stamp = dict(
+        schema=OBS_SCHEMA,
+        ts=datetime.datetime.now(datetime.timezone.utc).isoformat(
+            timespec="seconds"),
+    )
+    try:
+        import jax
+
+        dev = jax.devices()[0]
+        stamp["device"] = (f"{jax.default_backend()}:"
+                           f"{getattr(dev, 'device_kind', '?')}")
+        stamp["jax"] = jax.__version__
+    except Exception:  # pragma: no cover - stamping must never fail
+        stamp["device"] = "unknown"
+        stamp["jax"] = "unknown"
+    return stamp
+
+
+def dump(path=None) -> dict:
+    """Full telemetry document: ``{"stamp", "metrics", "events"}``; written
+    as JSON when ``path`` is given.  ``repro.obs.report`` renders these."""
+    doc = dict(stamp=run_stamp(), metrics=_state.registry.snapshot(),
+               events=_state.events.events(),
+               event_counts=_state.events.counts())
+    if path is not None:
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1, default=str)
+    return doc

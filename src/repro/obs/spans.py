@@ -1,0 +1,80 @@
+"""Lightweight phase spans: nested wall-time timing into span histograms.
+
+``obs.span("detect")`` times a ``with`` block and records the duration into
+the ``race_span_seconds`` histogram labeled with the *leaf* span name plus
+the full nesting ``path`` (thread-local stack), so both "total time in
+detect" and "detect inside race inside autotune" views exist:
+
+    with obs.span("race"):
+        with obs.span("detect"):       # span=detect, path=race/detect
+            ...
+
+When observability is disabled, ``obs.span`` returns one shared no-op
+context manager — no allocation, no clock read, no stack touch — which is
+the whole overhead story of the ``RACE_OBS=0`` path.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+_stack = threading.local()
+
+
+def _path_of(name: str) -> str:
+    stack = getattr(_stack, "names", None)
+    if stack is None:
+        stack = _stack.names = []
+    return "/".join(stack + [name])
+
+
+def current_path() -> str:
+    """The active nesting path ("" at top level) — introspection for tests
+    and for events that want to record which phase emitted them."""
+    stack = getattr(_stack, "names", None)
+    return "/".join(stack) if stack else ""
+
+
+class Span:
+    """One timed phase; records on exit (exceptions still record)."""
+
+    __slots__ = ("name", "labels", "registry", "t0", "path", "seconds")
+
+    def __init__(self, name: str, registry, labels: dict):
+        self.name = name
+        self.registry = registry
+        self.labels = labels
+        self.t0 = 0.0
+        self.path = ""
+        self.seconds = None
+
+    def __enter__(self) -> "Span":
+        self.path = _path_of(self.name)
+        _stack.names.append(self.name)
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        dt = time.perf_counter() - self.t0
+        self.seconds = dt
+        stack = _stack.names
+        if stack and stack[-1] == self.name:
+            stack.pop()
+        self.registry.histogram(
+            "race_span_seconds", span=self.name, path=self.path,
+            **self.labels).observe(dt)
+
+
+class _NoopSpan:
+    """Shared do-nothing span for the disabled path."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NoopSpan":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        pass
+
+
+NOOP_SPAN = _NoopSpan()

@@ -70,19 +70,34 @@ def measure_candidate(plan: Plan, config: Config, env: Mapping,
     raise inside specialization and are reported here as errors — the tuner
     treats them as non-candidates rather than crashing the search.
     """
+    from repro import obs
+
     try:
-        ex = compile_plan(
-            plan, env, config.backend, block_rows=config.block_rows,
-            block_cols=config.block_cols, block_inner=config.block_inner,
-            interpret=interpret)
-        out = ex(env)
-        err = rel_err(out, truth)
-        if err > tolerance:
-            return Measurement(
-                config, "gated", rel_err=err,
-                detail=f"vs r0/xla baseline: {err:.2e} > {tolerance:.0e}")
-        us = time_executor(ex, env, repeats=repeats, warmup=warmup)
-        return Measurement(config, "ok", us=us, rel_err=err)
+        with obs.span("measure", config=config.describe()):
+            ex = compile_plan(
+                plan, env, config.backend, block_rows=config.block_rows,
+                block_cols=config.block_cols,
+                block_inner=config.block_inner, interpret=interpret)
+            out = ex(env)
+            err = rel_err(out, truth)
+            if err > tolerance:
+                m = Measurement(
+                    config, "gated", rel_err=err,
+                    detail=f"vs r0/xla baseline: {err:.2e} > "
+                           f"{tolerance:.0e}")
+            else:
+                us = time_executor(ex, env, repeats=repeats, warmup=warmup)
+                m = Measurement(config, "ok", us=us, rel_err=err)
     except Exception as e:  # noqa: BLE001 - reported, not swallowed
-        return Measurement(config, "error",
-                           detail=f"{type(e).__name__}: {e}")
+        m = Measurement(config, "error",
+                        detail=f"{type(e).__name__}: {e}")
+    if obs.enabled():
+        # one event per candidate verdict: gate passes are as much a
+        # decision as gate failures (the tuner's audit trail)
+        from repro.core.executor import plan_hash
+
+        obs.counter("race_tuning_candidates_total", status=m.status).inc()
+        obs.event("tuning_gate", plan=plan_hash(plan),
+                  config=config.describe(), status=m.status,
+                  rel_err=m.rel_err, us=m.us, detail=m.detail)
+    return m

@@ -38,12 +38,60 @@ import json
 import os
 import tempfile
 import threading
+import time
 from pathlib import Path
 from typing import Mapping, Optional
 
 SCHEMA_VERSION = 1
 
 ENV_STORE = "RACE_TUNING_CACHE"
+#: record-hygiene knobs, applied during :meth:`TuningStore.compact`:
+#:   RACE_TUNING_MAX_AGE_DAYS — drop records older than this many days
+#:     (records written before the ``ts`` field existed count as age 0 of
+#:     the epoch, i.e. oldest — they re-tune once and come back stamped);
+#:   RACE_TUNING_MAX_RECORDS  — keep only the newest N records by ``ts``.
+ENV_MAX_AGE_DAYS = "RACE_TUNING_MAX_AGE_DAYS"
+ENV_MAX_RECORDS = "RACE_TUNING_MAX_RECORDS"
+
+
+def eviction_limits() -> tuple:
+    """``(max_age_seconds | None, max_records | None)`` from the env."""
+    out = []
+    for var, scale in ((ENV_MAX_AGE_DAYS, 86400.0), (ENV_MAX_RECORDS, 1)):
+        raw = os.environ.get(var, "").strip()
+        if not raw:
+            out.append(None)
+            continue
+        try:
+            v = float(raw) * scale
+        except ValueError:
+            raise ValueError(f"{var}={raw!r} is not a number") from None
+        if v <= 0:
+            raise ValueError(f"{var} must be > 0, got {raw}")
+        out.append(int(v) if scale == 1 else v)
+    return tuple(out)
+
+
+def _select_evictions(records: Mapping, max_age, max_records,
+                      now: Optional[float] = None) -> list:
+    """Keys to drop under the age/size limits (newest-by-``ts`` survive;
+    records without a ``ts`` stamp sort oldest)."""
+    if max_age is None and max_records is None:
+        return []
+    now = time.time() if now is None else now
+    doomed = []
+    alive = []
+    for key, rec in records.items():
+        ts = rec.get("ts")
+        ts = float(ts) if isinstance(ts, (int, float)) else 0.0
+        if max_age is not None and now - ts > max_age:
+            doomed.append(key)
+        else:
+            alive.append((ts, key))
+    if max_records is not None and len(alive) > max_records:
+        alive.sort()  # oldest first
+        doomed.extend(key for _, key in alive[:len(alive) - max_records])
+    return doomed
 
 try:  # POSIX advisory locking; harmlessly absent elsewhere
     import fcntl
@@ -254,13 +302,15 @@ class TuningStore:
         (see :meth:`_rewrite_locked` for the durability contract)."""
         rec = dict(record)
         rec["schema"] = SCHEMA_VERSION
+        rec.setdefault("ts", time.time())  # age-eviction stamp (compact())
         if not isinstance(rec.get("key"), str):
             raise ValueError("tuning record needs a string 'key'")
         self._rewrite_locked(lambda merged: merged.__setitem__(rec["key"],
                                                                rec))
 
-    def compact(self) -> int:
-        """Rewrite the store keeping only the newest record per key.
+    def compact(self, now: Optional[float] = None) -> int:
+        """Rewrite the store keeping only the newest record per key, minus
+        any records the hygiene limits evict.
 
         The JSONL format is last-line-wins, so files written by append-mode
         writers (or carrying lines from older schema versions) accumulate
@@ -269,30 +319,55 @@ class TuningStore:
         under the same flock + atomic-rename discipline as :meth:`put`, and
         is invoked automatically by reads once the file exceeds
         ``compact_threshold`` physical lines (see ``_maybe_autocompact``).
+
+        Record hygiene rides the same rewrite: when
+        ``$RACE_TUNING_MAX_AGE_DAYS`` / ``$RACE_TUNING_MAX_RECORDS`` are
+        set, records older than the age limit (by their ``ts`` write stamp;
+        pre-stamp records count as oldest) and records beyond the newest-N
+        size limit are dropped.  Foreign-schema lines are *never* evicted —
+        they belong to other library versions and round-trip verbatim.
         Returns the number of physical lines removed.
 
-        A missing or already-compact store is a no-op: nothing is created
-        or rewritten (gratuitous churn would defeat the mtime-stamped
-        reload every reader relies on).
+        A missing or already-compact store (with no evictions due) is a
+        no-op: nothing is created or rewritten (gratuitous churn would
+        defeat the mtime-stamped reload every reader relies on).
         """
         self._compacting = True  # guards the _maybe_reload -> auto recursion
         try:
             if self._stat() is None:
                 return 0  # no store on disk: never fabricate one
             self._maybe_reload()
-            if self._raw_lines <= len(self._records) + len(self._foreign):
-                return 0  # one line per live key already
+            max_age, max_records = eviction_limits()
+            if (self._raw_lines <= len(self._records) + len(self._foreign)
+                    and not _select_evictions(self._records, max_age,
+                                              max_records, now=now)):
+                return 0  # one line per live key already, nothing to evict
             removed = 0
+            evicted = 0
 
             def mutate(merged):
                 # _rewrite_locked just re-read the file under the flock, so
                 # _raw_lines is the authoritative on-disk count (no second
                 # unlocked read, no racy arithmetic)
-                nonlocal removed
+                nonlocal removed, evicted
+                doomed = _select_evictions(merged, max_age, max_records,
+                                           now=now)
+                for key in doomed:
+                    del merged[key]
+                evicted = len(doomed)
                 removed = max(0, self._raw_lines - len(merged)
                               - len(self._foreign))
 
             self._rewrite_locked(mutate)
+            if evicted:
+                from repro import obs
+
+                if obs.enabled():
+                    obs.counter("race_tuning_store_evictions_total").inc(
+                        evicted)
+                    obs.event("tuning_store_evict", path=str(self.path),
+                              evicted=evicted, removed_lines=removed,
+                              max_age_s=max_age, max_records=max_records)
         finally:
             self._compacting = False
         return removed

@@ -191,16 +191,25 @@ def autotune(program: Program, env: Mapping, *,
         race_opts=race_opts, tolerance=tolerance, noise_margin=noise_margin)
     key = record_key("program", prog_h, sig, fence, opts=search)
 
+    from repro import obs
+
     if not force:
         rec = program_record(prog_h, sig, store=s, opts=search)
         if rec is not None and isinstance(rec.get("choice"), dict):
             stats = rec.get("stats") or {}
+            if obs.enabled():
+                obs.counter("race_tuning_lookups_total",
+                            outcome="store-hit").inc()
+                obs.event("tuning_store_hit", program=prog_h,
+                          choice=rec["choice"])
             return TuningDecision(
                 choice=Config.from_dict(rec["choice"]),
                 default=Config.from_dict(rec.get("default", rec["choice"])),
                 default_us=stats.get("default_us"),
                 tuned_us=stats.get("tuned_us"),
                 search_seconds=0.0, from_cache=True, key=key)
+    if obs.enabled():
+        obs.counter("race_tuning_lookups_total", outcome="search").inc()
 
     t0 = time.perf_counter()
     opts = dict(race_opts or {})
@@ -226,13 +235,24 @@ def autotune(program: Program, env: Mapping, *,
     if default not in configs:
         configs.append(default)
 
-    measurements = [
-        measure_candidate(plans[c.reassociate], c, env, truth, tol,
-                          repeats=repeats, warmup=warmup,
-                          interpret=interpret)
-        for c in configs]
-    winner, default_m = _pick(measurements, default, noise_margin)
+    with obs.span("autotune", program=prog_h):
+        measurements = [
+            measure_candidate(plans[c.reassociate], c, env, truth, tol,
+                              repeats=repeats, warmup=warmup,
+                              interpret=interpret)
+            for c in configs]
+        winner, default_m = _pick(measurements, default, noise_margin)
     search_s = time.perf_counter() - t0
+    if obs.enabled():
+        obs.event("tuning_decision", program=prog_h,
+                  choice=winner.config.describe(),
+                  default=default.describe(),
+                  default_us=default_m.us if default_m else None,
+                  tuned_us=winner.us, search_s=search_s,
+                  n_candidates=len(measurements),
+                  n_ok=sum(m.ok for m in measurements),
+                  n_gated=sum(m.status == "gated" for m in measurements),
+                  persisted=bool(write))
 
     if write:
         stats = dict(

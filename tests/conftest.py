@@ -36,6 +36,9 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "grad: exercises differentiable RACE (the adjoint-stencil "
                    "custom_vjp, repro.core.adjoint)")
+    config.addinivalue_line(
+        "markers", "obs: exercises the repro.obs observability layer "
+                   "(metrics, spans, structured events)")
 
 
 def pytest_collection_modifyitems(config, items):
@@ -50,3 +53,21 @@ def pytest_collection_modifyitems(config, items):
 @pytest.fixture(autouse=True)
 def _isolated_tuning_store(tmp_path, monkeypatch):
     monkeypatch.setenv("RACE_TUNING_CACHE", str(tmp_path / "tuning-store"))
+
+
+@pytest.fixture(autouse=True)
+def _isolated_obs(monkeypatch):
+    """Fresh, env-clean observability state around every test.
+
+    Telemetry is process-global by design (one registry per serving
+    process); tests must neither inherit the developer's ``RACE_OBS``
+    setting nor leak metrics/events into each other.
+    """
+    from repro import obs
+
+    monkeypatch.delenv(obs.ENV_OBS, raising=False)
+    monkeypatch.delenv(obs.ENV_EVENTS, raising=False)
+    monkeypatch.delenv(obs.ENV_RING, raising=False)
+    obs.reset()
+    yield
+    obs.reset()

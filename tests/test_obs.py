@@ -1,0 +1,512 @@
+"""The observability layer (PR 7): metrics, spans, structured events.
+
+Three contracts under test:
+
+  * the primitives — thread-safe registry, fixed log-bucket histograms,
+    nested spans, bounded event ring + JSONL sink (degrading, never fatal);
+  * the zero-cost disabled path — with ``RACE_OBS`` unset every
+    instrumentation site is a no-op: the shared ``NOOP_SPAN``, no registry
+    series, no ring entries, and no measurable per-call cost added to
+    ``CompiledRace.run``;
+  * the "never silent" integration — every pipeline decision (capability
+    fallback, adjoint refusal, frontend diagnostic, tuning gate, executor
+    cache build/evict) emits exactly its structured event when enabled.
+"""
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.apps.paper_kernels import get_case
+from repro.core.adjoint import adjoint_build
+from repro.core.backend import select_backend
+from repro.core.executor import (clear_cache, compile_plan, configure_cache,
+                                 executor_cache, plan_hash)
+from repro.core.ir import arr, loopnest, program
+from repro.core.race import race
+from repro.frontend import D_CONTROL_FLOW, CaptureError, capture
+from repro.obs import report
+from repro.obs.metrics import DEFAULT_BUCKETS, Histogram, Registry
+from repro.testing.differential import build_env
+from repro.tuning.measure import measure_candidate
+from repro.tuning.space import Config
+
+pytestmark = pytest.mark.obs
+
+
+def _enable(**kw):
+    obs.configure(enabled=True, **kw)
+
+
+# ---------------------------------------------------------------------------
+# primitives: registry, histogram, spans, events
+# ---------------------------------------------------------------------------
+
+
+def test_registry_counter_thread_safety():
+    reg = Registry()
+    n_threads, n_incs = 8, 1000
+
+    def worker():
+        for _ in range(n_incs):
+            reg.counter("c", plan="p").inc()
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert reg.counter("c", plan="p").value == n_threads * n_incs
+
+
+def test_registry_series_identity_and_label_order():
+    reg = Registry()
+    a = reg.counter("c", x="1", y="2")
+    b = reg.counter("c", y="2", x="1")  # label order must not matter
+    assert a is b
+    assert reg.counter("c", x="1", y="3") is not a
+
+
+def test_histogram_bucket_edges():
+    h = Histogram(edges=(1.0, 10.0, 100.0))
+    # bisect_left places a value exactly on an edge in that edge's bucket
+    for v in (0.5, 1.0):
+        h.observe(v)
+    h.observe(10.0)
+    h.observe(99.0)
+    h.observe(1e6)  # overflow
+    assert h.bucket_counts() == [2, 1, 1, 1]
+    snap = h.snapshot()
+    assert snap["count"] == 5
+    assert snap["min"] == 0.5 and snap["max"] == 1e6
+    # bucket-resolution estimate: the 3rd of 5 observations lands in the
+    # (1.0, 10.0] bucket, whose upper edge is the reported quantile
+    assert h.quantile(0.5) == 10.0
+
+
+def test_default_buckets_span_1us_to_100s():
+    assert DEFAULT_BUCKETS[0] == pytest.approx(1e-6)
+    assert DEFAULT_BUCKETS[-1] == pytest.approx(100.0)
+    assert list(DEFAULT_BUCKETS) == sorted(set(DEFAULT_BUCKETS))
+    assert len(DEFAULT_BUCKETS) == 33  # quarter-decade over 8 decades
+
+
+def test_histogram_rejects_unsorted_edges():
+    with pytest.raises(ValueError):
+        Histogram(edges=(1.0, 1.0, 2.0))
+
+
+def test_span_nesting_records_leaf_and_path():
+    _enable()
+    with obs.span("a"):
+        assert obs.current_path() == "a"
+        with obs.span("b"):
+            assert obs.current_path() == "a/b"
+            time.sleep(0.001)
+    assert obs.current_path() == ""  # the stack drains
+    snap = obs.snapshot()
+    series = snap["histograms"]
+    assert any("span=a" in s for s in series)
+    inner = [s for s in series if "span=b" in s]
+    assert inner and all("path=a/b" in s for s in inner)
+    summary = obs.span_summary()
+    assert summary["b"]["count"] == 1
+    assert summary["b"]["total_s"] >= 0.001
+
+
+def test_span_records_on_exception():
+    _enable()
+    with pytest.raises(RuntimeError):
+        with obs.span("boom"):
+            raise RuntimeError("x")
+    assert obs.span_summary()["boom"]["count"] == 1
+    assert obs.current_path() == ""
+
+
+def test_event_jsonl_roundtrip(tmp_path):
+    sink = tmp_path / "events.jsonl"
+    _enable(events_path=str(sink))
+    obs.event("tuning_gate", status="ok", plan="abcd", rel_err=1e-9)
+    obs.event("backend_fallback", plan="abcd", reasons=["strided-aux: x"])
+    ring = obs.events()
+    assert [e["seq"] for e in ring] == [1, 2]
+    loaded = obs.load_jsonl(sink)
+    assert loaded == ring  # the sink is the ring, durably
+    assert obs.events(kind="tuning_gate")[0]["status"] == "ok"
+    assert obs.event_log().counts() == {"tuning_gate": 1,
+                                        "backend_fallback": 1}
+
+
+def test_event_ring_is_bounded(monkeypatch):
+    monkeypatch.setenv(obs.ENV_RING, "4")
+    monkeypatch.setenv(obs.ENV_OBS, "1")
+    obs.reset()
+    for i in range(10):
+        obs.event("k", i=i)
+    evs = obs.events()
+    assert len(evs) == 4
+    assert [e["i"] for e in evs] == [6, 7, 8, 9]
+    assert evs[-1]["seq"] == 10  # seq keeps counting past evictions
+
+
+def test_broken_sink_degrades_to_ring_only(tmp_path):
+    _enable(events_path=str(tmp_path / "no-such-dir" / "e.jsonl"))
+    obs.event("k", i=0)
+    obs.event("k", i=1)
+    log = obs.event_log()
+    assert log.sink_errors == 1
+    assert log.sink_path is None  # sink detached, not retried per event
+    assert len(obs.events()) == 2  # the ring kept everything
+
+
+def test_event_coerces_non_json_fields():
+    _enable()
+    ev = obs.event("k", arr=np.float32(1.5), tup=(1, 2), obj=object())
+    assert ev["arr"] == "1.5" or ev["arr"] == 1.5
+    assert ev["tup"] == [1, 2]
+    assert isinstance(ev["obj"], str)
+    json.dumps(ev)  # must be serializable as emitted
+
+
+def test_prometheus_exposition():
+    _enable()
+    obs.counter("race_builds_total", reassociate="3").inc()
+    obs.gauge("race_reduced_ops", plan="ab").set(0.5)
+    obs.histogram("race_span_seconds", span="run", path="run").observe(1e-4)
+    text = obs.render_prometheus()
+    assert "# TYPE race_builds_total counter" in text
+    assert 'race_builds_total{reassociate="3"} 1' in text
+    assert "# TYPE race_reduced_ops gauge" in text
+    assert "# TYPE race_span_seconds histogram" in text
+    assert 'le="+Inf"} 1' in text
+    assert "race_span_seconds_count" in text
+    # cumulative buckets: the +Inf count equals _count
+    doc = json.loads(obs.render_json())
+    assert doc["counters"]['race_builds_total{reassociate=3}'] == 1
+
+
+def test_snapshot_label_filter():
+    _enable()
+    obs.counter("c", plan="a").inc()
+    obs.counter("c", plan="b").inc(2)
+    snap = obs.snapshot(label_filter={"plan": "a"})
+    assert list(snap["counters"]) == ["c{plan=a}"]
+
+
+def test_configure_keeps_history_reset_drops_it():
+    _enable()
+    obs.counter("c").inc()
+    obs.event("k")
+    obs.configure(ring=8)  # swap the log, keep history + metrics
+    assert len(obs.events()) == 1
+    assert obs.metrics().counter("c").value == 1
+    obs.reset()
+    assert obs.events() == []
+    assert obs.metrics().counter("c").value == 0
+    assert not obs.enabled()  # env is clean under the autouse fixture
+
+
+# ---------------------------------------------------------------------------
+# the disabled path is a no-op
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_primitives_are_noops():
+    assert not obs.enabled()
+    s = obs.span("detect", plan="x")
+    assert s is obs.NOOP_SPAN  # one shared object, no allocation
+    assert obs.span("run") is s
+    with s:
+        pass
+    assert obs.event("k", a=1) is None
+    assert obs.events() == []
+    snap = obs.snapshot()
+    assert snap["histograms"] == {} and snap["counters"] == {}
+
+
+def test_disabled_run_adds_no_telemetry_state():
+    """``RACE_OBS=0`` end to end: a full compile + serve loop must leave the
+    registry and the event ring exactly empty."""
+    assert not obs.enabled()
+    case = get_case("gaussian", 16)
+    res = race(case.program, reassociate=case.reassociate)
+    env = build_env(case)
+    clear_cache()
+    for _ in range(5):
+        res.run(env, "xla")
+    snap = obs.snapshot()
+    assert snap["counters"] == {}
+    assert snap["gauges"] == {}
+    assert snap["histograms"] == {}
+    assert obs.events() == []
+    tel = res.telemetry()
+    assert tel["obs_enabled"] is False
+    assert "metrics" not in tel and "events" not in tel
+
+
+def test_disabled_call_sites_are_cheap():
+    """The per-call cost of a disabled instrumentation site stays in the
+    sub-microsecond regime (generous 20us/call ceiling so a noisy CI box
+    can't flake this, while a regression to real work — allocation, lock,
+    clock read per call — still trips it)."""
+    n = 20_000
+    t0 = time.perf_counter()
+    for _ in range(n):
+        if not obs.enabled():
+            pass
+    t_flag = (time.perf_counter() - t0) / n
+    t0 = time.perf_counter()
+    for _ in range(n):
+        with obs.span("run", plan="x", backend="xla"):
+            pass
+        obs.event("k", a=1)
+    t_site = (time.perf_counter() - t0) / n
+    assert t_flag < 20e-6
+    assert t_site < 20e-6
+
+
+# ---------------------------------------------------------------------------
+# integration: one structured event per pipeline decision
+# ---------------------------------------------------------------------------
+
+
+def _strided_program(tag: str):
+    """A unique (per ``tag``) 1-D program with a strided read — refused by
+    both the adjoint detector and the Pallas capability probe, and unique
+    program hash so memoized paths still emit their event."""
+    loops, (i,) = loopnest(("i", 1, 16))
+    u, out = arr(f"u_{tag}"), arr(f"o_{tag}")
+    return program(loops, [(out[i], u[2 * i] + u[i])])
+
+
+def test_executor_cache_counters_and_events():
+    _enable()
+    case = get_case("gaussian", 16)
+    res = race(case.program, reassociate=case.reassociate)
+    env = build_env(case)
+    clear_cache()
+    ph = plan_hash(res.plan)
+    compile_plan(res.plan, env, "xla")  # miss
+    compile_plan(res.plan, env, "xla")  # hit
+    snap = obs.snapshot()
+    assert snap["counters"][
+        f"race_executor_cache_total{{event=miss,plan={ph}}}"] == 1
+    assert snap["counters"][
+        f"race_executor_cache_total{{event=hit,plan={ph}}}"] == 1
+    builds = obs.events(kind="executor_build")
+    assert len(builds) == 1 and builds[0]["plan"] == ph
+    assert builds[0]["backend"] == "xla"
+
+
+def test_executor_evict_event():
+    _enable()
+    case = get_case("gaussian", 16)
+    r0 = race(case.program, reassociate=0)
+    r3 = race(case.program, reassociate=3)
+    env = build_env(case)
+    clear_cache()
+    try:
+        configure_cache(1)
+        compile_plan(r0.plan, env, "xla")
+        compile_plan(r3.plan, env, "xla")  # evicts the r0 executor
+        evs = obs.events(kind="executor_evict")
+        assert len(evs) == 1
+        assert evs[0]["plan"] == plan_hash(r0.plan)
+        snap = obs.snapshot()
+        assert snap["counters"][
+            "race_executor_cache_total"
+            f"{{event=evict,plan={plan_hash(r0.plan)}}}"] == 1
+    finally:
+        configure_cache(128)
+        clear_cache()
+
+
+def test_executor_run_spans_and_counters():
+    _enable()
+    case = get_case("gaussian", 16)
+    res = race(case.program, reassociate=case.reassociate)
+    env = build_env(case)
+    clear_cache()
+    ex = compile_plan(res.plan, env, "xla")
+    for _ in range(3):
+        ex(env)
+    summary = obs.span_summary()
+    assert summary["lower"]["count"] == 1
+    assert summary["compile"]["count"] == 1  # first call only
+    assert summary["run"]["count"] == 2
+    ph = plan_hash(res.plan)
+    snap = obs.snapshot()
+    assert snap["counters"][
+        f"race_executor_runs_total{{backend=xla,plan={ph}}}"] == 3
+
+
+def test_race_spans_gauges_and_telemetry():
+    _enable()
+    case = get_case("gaussian", 16)
+    res = race(case.program, reassociate=case.reassociate)
+    summary = obs.span_summary()
+    assert summary["detect"]["count"] == 1
+    assert summary["contract"]["count"] == 1
+    tel = res.telemetry()
+    assert tel["obs_enabled"] is True
+    assert tel["plan"] == plan_hash(res.plan)
+    assert 0.0 < tel["reduced_ops"] < 1.0
+    gauges = tel["metrics"]["gauges"]
+    assert any(s.startswith("race_reduced_ops") for s in gauges)
+    # the label filter scopes the view to this plan alone
+    for series in tel["metrics"]["counters"]:
+        assert f"plan={tel['plan']}" in series or "plan=" not in series
+
+
+def test_backend_fallback_event():
+    _enable()
+    res = race(_strided_program("bf"))
+    sel = select_backend(res.plan, "auto")
+    assert sel.backend == "xla"  # the probe refused pallas
+    evs = obs.events(kind="backend_fallback")
+    assert len(evs) == 1
+    ev = evs[0]
+    assert ev["plan"] == plan_hash(res.plan)
+    assert ev["requested"] == "auto" and ev["backend"] == "xla"
+    assert ev["codes"] and ev["reasons"]
+    snap = obs.snapshot()
+    assert snap["counters"][
+        "race_backend_selections_total{backend=xla,requested=auto}"] == 1
+
+
+def test_lowering_facts_event_on_eligible_plan():
+    _enable()
+    # a 1-D nest is eligible only through the depth-generalization
+    # envelope — the probe records a "depth" fact, which must be emitted
+    loops, (i,) = loopnest(("i", 2, 30))
+    u, out = arr("u_lf"), arr("o_lf")
+    res = race(program(loops, [(out[i], (u[i - 1] + u[i]) + u[i + 1])]),
+               reassociate=3)
+    sel = select_backend(res.plan, "auto")
+    assert sel.backend == "pallas"
+    evs = obs.events(kind="lowering_facts")
+    assert evs and evs[-1]["plan"] == plan_hash(res.plan)
+    assert "depth" in evs[-1]["codes"]
+
+
+def test_adjoint_refusal_event():
+    _enable()
+    prog = _strided_program("adj")  # unique hash: the memo can't swallow it
+    build = adjoint_build(prog)
+    assert not build.ok
+    evs = obs.events(kind="adjoint_refusal")
+    assert len(evs) == 1
+    # the event carries the detector's structured reason code verbatim
+    assert evs[0]["reason"] and evs[0]["reason"] in build.reason
+    snap = obs.snapshot()
+    assert snap["counters"][
+        "race_adjoint_builds_total{outcome=refused}"] == 1
+
+
+def test_frontend_diagnostic_event():
+    _enable()
+
+    def bad(u, out):
+        n, m = u.shape
+        for i in range(1, n):
+            for j in range(1, m):
+                if j > 2:  # control flow: refused with D_CONTROL_FLOW
+                    out[i, j] = u[i, j]
+
+    with pytest.raises(CaptureError):
+        capture(bad, {"u": (8, 8), "out": (8, 8)})
+    evs = obs.events(kind="frontend_diagnostic")
+    assert len(evs) == 1
+    assert evs[0]["code"] == D_CONTROL_FLOW
+    assert evs[0]["function"] == "bad"
+    snap = obs.snapshot()
+    assert snap["counters"][
+        f"race_frontend_diagnostics_total{{code={D_CONTROL_FLOW}}}"] == 1
+
+
+def test_frontend_capture_success_counts():
+    _enable()
+
+    def ok(u, out):
+        n, m = u.shape
+        for i in range(1, n - 1):
+            for j in range(1, m - 1):
+                out[i, j] = u[i - 1, j] + u[i + 1, j]
+
+    capture(ok, {"u": (8, 8), "out": (8, 8)})
+    snap = obs.snapshot()
+    assert snap["counters"]["race_frontend_captures_total"] == 1
+    assert obs.span_summary()["capture"]["count"] == 1
+
+
+def test_tuning_gate_event():
+    _enable()
+    case = get_case("gaussian", 16)
+    res = race(case.program, reassociate=0)
+    env = build_env(case)
+    truth = {k: np.asarray(v) + 1e3  # deliberately wrong baseline
+             for k, v in compile_plan(res.plan, env, "xla")(env).items()}
+    m = measure_candidate(res.plan, Config(0, "xla"), env, truth, 1e-6)
+    assert m.status == "gated"
+    evs = obs.events(kind="tuning_gate")
+    assert len(evs) == 1
+    assert evs[0]["status"] == "gated"
+    assert evs[0]["plan"] == plan_hash(res.plan)
+    snap = obs.snapshot()
+    assert snap["counters"][
+        "race_tuning_candidates_total{status=gated}"] == 1
+
+
+# ---------------------------------------------------------------------------
+# dump + report CLI
+# ---------------------------------------------------------------------------
+
+
+def test_dump_and_report_roundtrip(tmp_path, capsys):
+    _enable()
+    case = get_case("gaussian", 16)
+    res = race(case.program, reassociate=case.reassociate)
+    env = build_env(case)
+    clear_cache()
+    res.run(env, "xla")
+    path = tmp_path / "dump.json"
+    doc = obs.dump(path)
+    assert doc["stamp"]["schema"] == obs.OBS_SCHEMA
+    assert "T" in doc["stamp"]["ts"]  # ISO-8601 UTC
+    on_disk = json.loads(path.read_text())
+    assert on_disk["metrics"]["counters"] == doc["metrics"]["counters"]
+
+    rc = report.main([str(path), "--require-spans",
+                      "detect,lower,compile"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "require-spans ok" in out
+    assert "detect" in out
+
+    rc = report.main([str(path), "--require-spans", "no_such_span"])
+    err = capsys.readouterr().err
+    assert rc == 2
+    assert "MISSING SPANS: no_such_span" in err
+
+
+def test_report_span_table_merges_label_sets():
+    metrics = {"histograms": {
+        "race_span_seconds{path=run,span=run}": dict(
+            count=2, sum=0.2, edges=[0.1, 1.0], counts=[1, 1, 0], max=0.5),
+        "race_span_seconds{path=a/run,span=run}": dict(
+            count=1, sum=0.05, edges=[0.1, 1.0], counts=[1, 0, 0], max=0.05),
+    }}
+    table = report.span_table(metrics)
+    assert table["run"]["count"] == 3
+    assert table["run"]["total"] == pytest.approx(0.25)
+
+
+def test_run_stamp_fields():
+    st = obs.run_stamp()
+    assert st["schema"] == obs.OBS_SCHEMA
+    assert st["ts"].endswith("+00:00")  # UTC
+    assert ":" in st["device"]
+    assert st["jax"] not in ("", None)

@@ -186,6 +186,93 @@ def test_compact_empty_and_missing_store(tmp_path):
     assert path.stat().st_mtime_ns == mtime
 
 
+def test_compact_evicts_by_age(tmp_path, monkeypatch):
+    """Records older than RACE_TUNING_MAX_AGE_DAYS (by their ``ts`` write
+    stamp) are dropped during compact; fresh ones and foreign-schema lines
+    survive the rewrite verbatim."""
+    import time as _time
+
+    from repro.tuning.store import eviction_limits
+
+    now = _time.time()
+    path = tmp_path / "t.jsonl"
+    store = TuningStore(path)
+    store.put(dict(_rec("fresh"), ts=now - 3600.0))
+    store.put(dict(_rec("stale"), ts=now - 40 * 86400.0))
+    store.put(dict(_rec("unstamped")))  # put() stamps ts=now itself
+    with open(path, "a") as f:
+        f.write(json.dumps(dict(schema=SCHEMA_VERSION - 1, key="old",
+                                ts=now - 400 * 86400.0)) + "\n")
+
+    monkeypatch.setenv("RACE_TUNING_MAX_AGE_DAYS", "30")
+    assert eviction_limits() == (30 * 86400.0, None)
+    s2 = TuningStore(path)
+    removed = s2.compact(now=now)
+    assert removed == 1
+    assert s2.get("stale") is None
+    assert s2.get("fresh") is not None and s2.get("unstamped") is not None
+    # the ancient foreign line is untouched: not ours to age out
+    on_disk = [json.loads(l) for l in path.read_text().splitlines()]
+    assert any(r["key"] == "old" for r in on_disk)
+
+
+def test_compact_evicts_by_size_keeping_newest(tmp_path, monkeypatch):
+    import time as _time
+
+    now = _time.time()
+    path = tmp_path / "t.jsonl"
+    store = TuningStore(path)
+    for i in range(6):
+        store.put(dict(_rec(f"k{i}"), ts=now - i * 100.0))  # k0 newest
+    monkeypatch.setenv("RACE_TUNING_MAX_RECORDS", "2")
+    s2 = TuningStore(path)
+    removed = s2.compact(now=now)
+    assert removed == 4
+    assert sorted(TuningStore(path).keys()) == ["k0", "k1"]
+
+
+def test_compact_unstamped_records_evict_first(tmp_path, monkeypatch):
+    """Pre-PR-7 records carry no ``ts``: under a size cap they sort oldest
+    (they re-tune once and come back stamped), never shadowing stamped
+    records."""
+    import time as _time
+
+    now = _time.time()
+    path = tmp_path / "t.jsonl"
+    lines = [json.dumps(dict(_rec("legacy"), schema=SCHEMA_VERSION)),  # no ts
+             json.dumps(dict(_rec("stamped"), schema=SCHEMA_VERSION,
+                             ts=now))]
+    path.write_text("\n".join(lines) + "\n")
+    monkeypatch.setenv("RACE_TUNING_MAX_RECORDS", "1")
+    store = TuningStore(path)
+    assert store.compact(now=now) == 1
+    assert store.get("stamped") is not None
+    assert store.get("legacy") is None
+
+
+def test_eviction_limits_validation(monkeypatch):
+    from repro.tuning.store import eviction_limits
+
+    assert eviction_limits() == (None, None)
+    monkeypatch.setenv("RACE_TUNING_MAX_AGE_DAYS", "0.5")
+    monkeypatch.setenv("RACE_TUNING_MAX_RECORDS", "100")
+    assert eviction_limits() == (0.5 * 86400.0, 100)
+    monkeypatch.setenv("RACE_TUNING_MAX_RECORDS", "zero")
+    with pytest.raises(ValueError):
+        eviction_limits()
+    monkeypatch.setenv("RACE_TUNING_MAX_RECORDS", "-3")
+    with pytest.raises(ValueError):
+        eviction_limits()
+
+
+def test_put_stamps_ts(tmp_path):
+    path = tmp_path / "t.jsonl"
+    store = TuningStore(path)
+    store.put(_rec("a"))
+    rec = json.loads(path.read_text().splitlines()[0])
+    assert isinstance(rec["ts"], float) and rec["ts"] > 0
+
+
 def test_store_file_env_knob(tmp_path, monkeypatch):
     monkeypatch.setenv("RACE_TUNING_CACHE", str(tmp_path / "d"))
     assert store_file() == tmp_path / "d" / "tuning.jsonl"
