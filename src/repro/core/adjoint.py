@@ -611,11 +611,12 @@ def _zero_cotangent(primal):
     return jnp.zeros(shape, dt)
 
 
-def _run_spec(spec: InputSpec, env: Mapping, g: Mapping, *,
-              interpret: bool, backend: Optional[str]):
-    from .executor import compile_plan
-
-    res = spec.result()
+def assemble_adjoint_env(spec: InputSpec, env: Mapping, g: Mapping) -> dict:
+    """Materialize one adjoint plan's env from the forward env + cotangents
+    per the spec's feed recipe (padded cotangent canvases, ones-padded
+    coefficient arrays, scalar passthrough).  Shared by the single-device
+    backward below and the sharded backward (:mod:`repro.shard.executor`),
+    which runs the same adjoint plans under its own partition."""
     adj_env = {}
     for kind, src, adj_name, pads in spec.feeds:
         if kind == "scalar":
@@ -635,8 +636,13 @@ def _run_spec(spec: InputSpec, env: Mapping, g: Mapping, *,
             if any(lo or hi for lo, hi in padspec):
                 arr = jnp.pad(arr, padspec, constant_values=1)
             adj_env[adj_name] = arr
-    ex = compile_plan(res.plan, adj_env, backend, interpret=interpret)
-    val = ex(adj_env)[spec.gu]
+    return adj_env
+
+
+def finalize_adjoint(spec: InputSpec, env: Mapping, val):
+    """Shape one adjoint plan's raw output back into the input's geometry:
+    sum away broadcast levels, match the primal dtype (float0 for integer
+    leaves), and embed the access hull into input-shaped zeros."""
     if spec.sum_axes:
         val = val.sum(axis=spec.sum_axes)
     primal = env[spec.input]
@@ -653,6 +659,17 @@ def _run_spec(spec: InputSpec, env: Mapping, g: Mapping, *,
     canvas = jnp.zeros(shape, dt)
     region = tuple(slice(lo, hi + 1) for lo, hi in spec.embed)
     return canvas.at[region].set(val)
+
+
+def _run_spec(spec: InputSpec, env: Mapping, g: Mapping, *,
+              interpret: bool, backend: Optional[str]):
+    from .executor import compile_plan
+
+    res = spec.result()
+    adj_env = assemble_adjoint_env(spec, env, g)
+    ex = compile_plan(res.plan, adj_env, backend, interpret=interpret)
+    val = ex(adj_env)[spec.gu]
+    return finalize_adjoint(spec, env, val)
 
 
 _baseline_memo: dict = {}

@@ -207,6 +207,25 @@ def stacked_signature(stacked: Mapping) -> tuple:
     return tuple(sig)
 
 
+_DEVICE_CONTEXT: Optional[str] = None
+
+
+def device_context() -> str:
+    """``backend:device_kind:device_count`` of this process (memoized).
+
+    Part of every :class:`ExecutorKey`: a compiled executor is specialized
+    against concrete devices, so entries from different device contexts —
+    and in particular sharded vs unsharded compiles of the same plan hash —
+    must never serve each other."""
+    global _DEVICE_CONTEXT
+    if _DEVICE_CONTEXT is None:
+        dev = jax.devices()[0]
+        _DEVICE_CONTEXT = (f"{jax.default_backend()}:"
+                           f"{getattr(dev, 'device_kind', '?')}:"
+                           f"{jax.device_count()}")
+    return _DEVICE_CONTEXT
+
+
 @dataclass(frozen=True)
 class ExecutorKey:
     """Full identity of one compiled specialization."""
@@ -217,6 +236,14 @@ class ExecutorKey:
     #: (block_rows, block_cols, block_inner, interpret) | None (xla)
     blocks: Optional[tuple]
     donate: bool
+    #: device context (``device_context()``); "" only on legacy keys
+    device: str = ""
+    #: sharded entries only: (((axis, size), ...), (device ids, ...))
+    mesh: tuple = ()
+    #: sharded entries only: partition spec ((level, axis, shards), ...)
+    partition: tuple = ()
+    #: sharded entries only: requested halo strategy
+    halo: str = ""
 
 
 # ---------------------------------------------------------------------------
@@ -359,6 +386,16 @@ class CompiledRace:
                      backend=self.backend).inc()
         return out
 
+    # -- sharded composition --------------------------------------------------
+
+    @property
+    def core_fn(self):
+        """The raw primal core (``env -> interior outputs``): no jit, no
+        custom_vjp.  The sharded executor (:mod:`repro.shard`) runs this
+        inside ``shard_map`` — differentiation and jit happen once, at its
+        own outer dispatch, so the inner wrapper must be bypassed."""
+        return self._core
+
     # -- introspection ------------------------------------------------------
 
     def cache_info(self) -> dict:
@@ -401,7 +438,10 @@ class ExecutorCache:
     The build happens under the lock: specialization is milliseconds (the
     expensive XLA compile is lazy, at the executor's first call, and jax's
     own jit cache is thread-safe), and building inside guarantees exactly
-    one miss and one executor per key under concurrent first calls.
+    one miss and one executor per key under concurrent first calls.  The
+    lock is reentrant because builders nest: a sharded executor's builder
+    (:mod:`repro.shard`) compiles its per-shard local executor through this
+    same cache.
     """
 
     def __init__(self, maxsize: Optional[int] = None):
@@ -409,7 +449,7 @@ class ExecutorCache:
             maxsize = _env_cache_size()
         self.maxsize = maxsize
         self._entries: OrderedDict = OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         self.stats = CacheStats()
 
     def get_or_build(self, key: ExecutorKey,
@@ -464,9 +504,14 @@ class ExecutorCache:
             return list(self._entries)
 
     def cache_info(self) -> dict:
-        """Stats plus the configured capacity (``RACE_EXECUTOR_CACHE_SIZE``)."""
+        """Stats plus the configured capacity (``RACE_EXECUTOR_CACHE_SIZE``),
+        the distinct device contexts keyed, and how many entries are sharded
+        executors (mesh-bearing keys from :mod:`repro.shard`)."""
         with self._lock:
             return dict(maxsize=self.maxsize, currsize=len(self._entries),
+                        devices=sorted({k.device for k in self._entries
+                                        if k.device}),
+                        sharded=sum(1 for k in self._entries if k.mesh),
                         **self.stats.snapshot())
 
 
@@ -606,7 +651,8 @@ def compile_plan(plan: Plan, env: Union[Mapping, tuple],
         donate = False
     blocks = ((block_rows, block_cols, block_inner, bool(interpret))
               if sel.backend == "pallas" else None)
-    key = ExecutorKey(plan_hash(plan), sig, sel.backend, blocks, bool(donate))
+    key = ExecutorKey(plan_hash(plan), sig, sel.backend, blocks, bool(donate),
+                      device=device_context())
     c = cache if cache is not None else _CACHE
     return c.get_or_build(key, lambda: CompiledRace(
         plan, sig, sel, block_rows=block_rows, block_cols=block_cols,

@@ -172,6 +172,12 @@ class RaceResult:
         """
         from .executor import compile_plan, env_signature
 
+        if backend is None and self.options.get("mesh") is not None:
+            # race(..., mesh=...) makes sharded the default execution path;
+            # an explicit backend= on run() opts back into single-device
+            return self.run_sharded(
+                env, block_rows=block_rows, block_cols=block_cols,
+                block_inner=block_inner, interpret=interpret)
         if backend is None and (self._tuned
                                 or self.options.get("tune") is not None):
             entry = self._tuned_entry(env, env_signature(env))
@@ -187,6 +193,42 @@ class RaceResult:
             self.plan, env, backend or self.options.get("backend", "auto"),
             block_rows=block_rows, block_cols=block_cols,
             block_inner=block_inner, interpret=interpret, donate=donate)
+        return ex(env)
+
+    def run_sharded(self, env: dict, mesh=None, backend: Optional[str] = None,
+                    *, halo: Optional[str] = None, block_rows: int = 8,
+                    block_cols: int = 8, block_inner: int = 0,
+                    interpret: bool = True):
+        """Execute spatially partitioned over a device mesh.
+
+        The plan's iteration box is split across ``mesh`` (falling back to
+        the mesh given to :func:`race`), each shard runs the ordinary
+        compiled executor on its chunk under ``jax.shard_map``, and halos
+        sized by the geometry envelopes travel between neighbors — see
+        :mod:`repro.shard`.  Outputs are the same interior convention as
+        :meth:`run` (differentially identical to single-device execution),
+        and gradients flow through a ``custom_vjp`` that re-partitions the
+        adjoint-stencil plans under the same mesh.
+
+        Raises :class:`repro.shard.ShardingUnavailable` with structured
+        refusal reasons when no mesh axis can be placed on any grid level.
+        ``halo`` picks the transport strategy (``"auto"`` | ``"exchange"`` |
+        ``"recompute"``), defaulting to the one recorded by :func:`race`.
+        """
+        from repro.shard import compile_sharded
+
+        mesh = mesh if mesh is not None else self.options.get("mesh")
+        if mesh is None:
+            raise ValueError(
+                "run_sharded needs a device mesh: pass mesh= here or to "
+                "race(..., mesh=...)")
+        ex = compile_sharded(
+            self, env, mesh,
+            halo=halo if halo is not None
+            else self.options.get("halo", "auto"),
+            backend=backend or self.options.get("backend", "auto"),
+            block_rows=block_rows, block_cols=block_cols,
+            block_inner=block_inner, interpret=interpret)
         return ex(env)
 
     def run_batch(self, envs, backend: Optional[str] = None, *,
@@ -308,6 +350,8 @@ def race(
     mis_exact_limit: int = 40,
     backend: Optional[str] = None,
     tune=False,
+    mesh=None,
+    halo: str = "auto",
 ) -> RaceResult:
     """Run RACE on a program.  See module docstring for knobs.
 
@@ -325,6 +369,12 @@ def race(
     store) and every later call runs the winner.  Pass a dict instead of
     True to forward keyword options to :func:`repro.tuning.autotune`,
     e.g. ``tune=dict(levels=(0, 3), backends=("xla",))``.
+
+    ``mesh`` (a ``jax.sharding.Mesh``, e.g. from
+    :func:`repro.launch.mesh.make_stencil_mesh`) makes sharded execution the
+    default: :meth:`RaceResult.run` delegates to :meth:`RaceResult.run_sharded`
+    when no explicit backend is passed.  ``halo`` records the transport
+    strategy for that path (see :data:`repro.shard.HALO_STRATEGIES`).
     """
     if backend is None:
         from .executor import default_backend
@@ -386,6 +436,8 @@ def race(
             mis_exact_limit=mis_exact_limit,
             tune=(dict(tune) if isinstance(tune, dict)
                   else {} if tune else None),
+            mesh=mesh,
+            halo=halo,
         ),
     )
 

@@ -31,6 +31,51 @@ def make_mesh(shape, axes):
                          **_axis_type_kwargs(len(axes)))
 
 
+def stencil_mesh_shape(n: int, k: int) -> tuple:
+    """Factor ``n`` devices into ``k`` near-square mesh dims, largest first.
+
+    Mirrors the ``models/sharding.py:_fit`` divisibility discipline: every
+    dim is an exact divisor of ``n`` by construction, so a product over any
+    axis subset always divides the device count.  Per trailing axis we take
+    the largest divisor no bigger than the remaining count's k-th root:
+    8 -> (4, 2), 4 -> (2, 2), 6 -> (3, 2), primes degrade to (n, 1, ...).
+    """
+    if n < 1:
+        raise ValueError(f"need at least one device, got {n}")
+    if k < 1:
+        raise ValueError(f"need at least one mesh axis, got {k}")
+    dims = []
+    for remaining in range(k, 1, -1):
+        root = n ** (1.0 / remaining)
+        d = max(f for f in range(1, int(root + 1e-9) + 1) if n % f == 0)
+        dims.append(d)
+        n //= d
+    dims.append(n)
+    return tuple(sorted(dims, reverse=True))
+
+
+def make_stencil_mesh(n_devices=None, axes=("sx", "sy")):
+    """Near-square spatial mesh over the first ``n_devices`` host devices.
+
+    The sharded executor (``repro.shard``) partitions a plan's iteration box
+    over this mesh; CPU CI forces host devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` and carves
+    1/2/4/8-device submeshes out of the same process for scaling rows, which
+    is why this builds over a device *subset* rather than ``jax.make_mesh``'s
+    all-devices contract.
+    """
+    import numpy as np
+
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else int(n_devices)
+    if not 1 <= n <= len(devs):
+        raise ValueError(
+            f"n_devices={n} out of range for {len(devs)} visible device(s)")
+    axes = tuple(axes)
+    shape = stencil_mesh_shape(n, len(axes))
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
 # v5e hardware constants used by the roofline analysis (per chip)
 PEAK_FLOPS_BF16 = 197e12      # FLOP/s
 HBM_BW = 819e9                # B/s

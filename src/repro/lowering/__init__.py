@@ -32,7 +32,8 @@ from .facts import (FALLBACK_CODES, RETIRED_CODES, R_CONSTANT_DIM, R_DEPTH,
                     R_REPEATED_LEVEL, R_SCALAR_AUX, R_STRIDED_AUX,
                     R_ZERO_COEF, FallbackReason, LoweringError, LoweringFact)
 from .geometry import (K_GATHER, K_WINDOW, ArrayInfo, LoweringAnalysis,
-                       analyze_plan, plan_geometry)
+                       analyze_plan, analyze_program, offset_envelopes,
+                       plan_geometry, program_envelopes)
 
 #: emit-side symbols resolved lazily (they import jax + Pallas)
 _EMIT = ("LoweredStencil", "StencilSpec", "specialize_stencil",
@@ -47,7 +48,8 @@ __all__ = [
     "R_REPEATED_LEVEL", "R_SCALAR_AUX", "R_STRIDED_AUX", "R_ZERO_COEF",
     "FallbackReason", "LoweringError", "LoweringFact",
     "K_GATHER", "K_WINDOW", "ArrayInfo", "LoweringAnalysis",
-    "analyze_plan", "plan_geometry",
+    "analyze_plan", "analyze_program", "offset_envelopes",
+    "plan_geometry", "program_envelopes",
     *_EMIT, *_BLOCKS, *_GATHER,
 ]
 

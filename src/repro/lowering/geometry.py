@@ -37,7 +37,7 @@ from dataclasses import dataclass, field
 from fractions import Fraction
 
 from repro.core.depgraph import Plan, _aux_ref_shifts
-from repro.core.ir import Expr, Ref, expr_refs
+from repro.core.ir import Expr, Program, Ref, expr_refs
 
 from .facts import (R_CONSTANT_DIM, R_DEPTH, R_FRACTIONAL_OFFSET,
                     R_INCONSISTENT_LAYOUT, R_LHS_FORM, R_MIXED_STRIDE,
@@ -314,6 +314,78 @@ def _analyze(plan: Plan) -> LoweringAnalysis:
         visit_base(plan.aux_exprs[a.name], ext[a.name])
 
     return LoweringAnalysis(plan, m, True, (), facts, arrays, ext)
+
+
+def offset_envelopes(plan: Plan):
+    """Stable envelope API for consumers outside the lowering engine.
+
+    Returns ``{array name: {level: (off_lo, off_hi)}}`` over the plan's
+    *window-class* base arrays — per referenced level, the min/max of
+    ``b ∓ |a|·ext`` across every reference in every context (auxiliary
+    reach included), in raw (unflipped) array coordinates — or ``None``
+    when the plan is geometry-ineligible, in which case
+    ``analyze_plan(plan).reasons`` carries the structured why.
+
+    Note these are the *plan's* read envelopes: auxiliary range propagation
+    keeps rectangular hulls, so they over-approximate the reads that
+    actually influence the interior outputs (the slop positions hold
+    partial sums never consumed by the main statements).  Consumers sizing
+    data movement by what *matters* — the sharded execution layer
+    (:mod:`repro.shard`) sizing per-shard slabs — use
+    :func:`program_envelopes` instead: RACE preserves semantics, so every
+    influencing auxiliary value is a partial sum of original-program terms
+    at the same iteration point, and the program's direct offsets bound the
+    influencing reach exactly.  Gather-class arrays have no window form and
+    do not appear; their levels are reported by
+    ``analyze_plan(plan).arrays[name].levels``.
+    """
+    a = analyze_plan(plan)
+    if not a.eligible:
+        return None
+    return {nm: {l: (info.off_lo[l], info.off_hi[l]) for l in info.levels}
+            for nm, info in a.arrays.items() if info.kind == K_WINDOW}
+
+
+class _ProgramShim:
+    """Just enough Plan surface for ``_analyze`` to classify a bare Program:
+    the body is the program's own statements and there are no auxiliaries,
+    so the resulting envelopes are the *direct* per-reference offsets."""
+
+    def __init__(self, program: Program):
+        self.program = program
+        self.body = program.body
+        self.aux_order = ()
+        self.aux_exprs: dict = {}
+
+
+def analyze_program(program: Program) -> LoweringAnalysis:
+    """`analyze_plan` over a program's own statements (no plan, no aux).
+
+    Same classification vocabulary — window/gather kinds, per-level
+    coefficients and signs, structured ineligibility reasons — but the
+    ``off_lo``/``off_hi`` envelopes are the program's direct read offsets,
+    i.e. the exact influencing reach of *any* RACE plan derived from it.
+    Memoized on the program instance."""
+    cached = getattr(program, "_program_analysis", None)
+    if cached is None:
+        cached = _analyze(_ProgramShim(program))
+        object.__setattr__(program, "_program_analysis", cached)
+    return cached
+
+
+def program_envelopes(program: Program):
+    """``{array: {level: (off_lo, off_hi)}}`` of a program's direct reads
+    over its window-class arrays, or ``None`` when geometry-ineligible
+    (``analyze_program(program).reasons`` says why).
+
+    This is the envelope the sharded execution layer (:mod:`repro.shard`)
+    sizes halos from: the tightest correct slab extension, independent of
+    which plan (which auxiliary decomposition) executes the program."""
+    a = analyze_program(program)
+    if not a.eligible:
+        return None
+    return {nm: {l: (info.off_lo[l], info.off_hi[l]) for l in info.levels}
+            for nm, info in a.arrays.items() if info.kind == K_WINDOW}
 
 
 def aux_shift(ref: Ref) -> dict:

@@ -40,11 +40,22 @@ def _axsize(mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
+def divides(mesh, dim: int, axes) -> bool:
+    """Public face of the ``_fit`` divisibility guard: True when ``dim`` is
+    positive and the total size of ``axes`` over ``mesh`` divides it evenly.
+
+    The sharded-execution partitioner (``repro.shard.partition``) applies the
+    same rule to grid-level *extents* that ``_fit`` applies to tensor dims:
+    a mesh axis only lands on a dimension it divides.
+    """
+    return dim > 0 and dim % _axsize(mesh, axes) == 0
+
+
 def _fit(mesh, shape, spec) -> P:
     """Drop axes from dims they don't divide."""
     out = []
     for dim, axes in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
-        if axes is not None and dim % _axsize(mesh, axes) == 0 and dim > 0:
+        if axes is not None and divides(mesh, dim, axes):
             out.append(axes)
         else:
             out.append(None)

@@ -1,0 +1,38 @@
+"""Sharded giant-grid execution: shard_map over the compiled executor.
+
+Spatially partitions a plan's iteration box over a device mesh and runs the
+existing plan-keyed compiled executor per shard under ``jax.shard_map``, with
+neighbor halo exchange sized exactly by the lowering engine's per-array
+offset envelopes.  Three layers:
+
+* :mod:`repro.shard.partition` — which grid levels can shard, and where each
+  mesh axis lands; refusal is a structured :class:`ShardRefusal`, never
+  silent (codes in :data:`SHARD_REFUSAL_CODES`).
+* :mod:`repro.shard.halo` — per-call halo transport (``ppermute`` exchange
+  vs. padded-slab recompute, ``"auto"``-picked by a roofline heuristic).
+* :mod:`repro.shard.executor` — :func:`compile_sharded` /
+  :class:`ShardedRace`: cache-keyed sharded dispatch with a ``custom_vjp``
+  backward that re-partitions each adjoint-stencil plan under the same mesh.
+
+Importing this package never touches jax *device state* (``partition`` is
+pure analysis and imports no jax at all; ``halo``/``executor`` defer device
+queries to call time), matching the repo-wide rule that
+``--xla_force_host_platform_device_count`` must still be settable after
+import.
+"""
+from .executor import ShardedRace, ShardingUnavailable, compile_sharded
+from .halo import HALO_STRATEGIES, ArraySpec, HaloProgram, SlabDim, plan_halo
+from .partition import (S_DIVISIBILITY, S_ENVELOPE, S_GATHER, S_GEOMETRY,
+                        S_HALO, S_MIRRORED, S_NO_AXIS, S_STRIDED,
+                        SHARD_REFUSAL_CODES, AxisAssignment, LevelVerdict,
+                        PartitionPlan, ShardRefusal, plan_partition)
+
+__all__ = [
+    "SHARD_REFUSAL_CODES",
+    "S_DIVISIBILITY", "S_ENVELOPE", "S_GATHER", "S_GEOMETRY", "S_HALO",
+    "S_MIRRORED", "S_NO_AXIS", "S_STRIDED",
+    "ShardRefusal", "LevelVerdict", "AxisAssignment", "PartitionPlan",
+    "plan_partition",
+    "HALO_STRATEGIES", "SlabDim", "ArraySpec", "HaloProgram", "plan_halo",
+    "ShardingUnavailable", "ShardedRace", "compile_sharded",
+]

@@ -39,6 +39,10 @@ def pytest_configure(config):
     config.addinivalue_line(
         "markers", "obs: exercises the repro.obs observability layer "
                    "(metrics, spans, structured events)")
+    config.addinivalue_line(
+        "markers", "shard: exercises sharded giant-grid execution "
+                   "(repro.shard: partitioner, halo transport, shard_map "
+                   "executor; multi-device runs fork a subprocess)")
 
 
 def pytest_collection_modifyitems(config, items):
