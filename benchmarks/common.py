@@ -74,13 +74,28 @@ def bench_stamp() -> dict:
     return run_stamp()
 
 
+def record_history(section: str, rows, stamp: dict) -> None:
+    """Append one section's rows to the cross-run benchmark history
+    (``repro.obs.history``) — a no-op unless ``$RACE_BENCH_HISTORY`` names
+    the trajectory file.  The regression sentinel (``repro.obs.check``)
+    gates later runs against what lands here."""
+    from repro.obs.history import append_rows, history_file
+
+    n = append_rows(section, rows, stamp)
+    if n:
+        print(csv_line(f"history.{section}", 0.0,
+                       f"appended={n};path={history_file()}"))
+
+
 def section_main(section: str, run_fn, argv=None) -> None:
     """Shared ``python -m benchmarks.<section>`` entry point.
 
     ``--quick`` shrinks the sweep, ``--compiled`` drops interpret mode,
     ``--json [PATH]`` writes the stamped structured rows (default
     ``BENCH_<section>.json``).  With ``RACE_OBS=1`` the accumulated metrics
-    + event snapshot lands in ``OBS_metrics.json``.
+    + event snapshot lands in ``OBS_metrics.json``; with
+    ``RACE_BENCH_HISTORY`` set the rows also append to the cross-run
+    benchmark history.
     """
     import argparse
     import json
@@ -95,12 +110,14 @@ def section_main(section: str, run_fn, argv=None) -> None:
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
+    stamp = bench_stamp()
     rows = run_fn(quick=args.quick, interpret=not args.compiled)
     if args.json:
         with open(args.json, "w") as f:
-            json.dump(dict(stamp=bench_stamp(), section=section,
+            json.dump(dict(stamp=stamp, section=section,
                            rows=rows), f, indent=1, default=str)
         print(csv_line(f"json.{section}", 0.0, f"wrote={args.json}"))
+    record_history(section, rows, stamp)
     from repro import obs
 
     if obs.enabled():

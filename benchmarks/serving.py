@@ -166,15 +166,17 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     print("name,us_per_call,derived")
+    from .common import bench_stamp, record_history
+
+    stamp = bench_stamp()
     rows = run(quick=args.quick, repeats=args.repeats, batch=args.batch,
                interpret=not args.compiled)
     if args.json:
-        from .common import bench_stamp
-
         with open(args.json, "w") as f:
-            json.dump(dict(stamp=bench_stamp(), section="serving",
+            json.dump(dict(stamp=stamp, section="serving",
                            rows=rows), f, indent=1, default=str)
         print(csv_line("json.serving", 0.0, f"wrote={args.json}"))
+    record_history("serving", rows, stamp)
     if obs.enabled():
         obs.dump("OBS_metrics.json")
         print(csv_line("obs", 0.0, "wrote=OBS_metrics.json"))

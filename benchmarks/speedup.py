@@ -87,8 +87,12 @@ def run(cases=None, print_fn=print, repeats: int = 5, backend: str = "xla",
                 derived += f";pallas_fallback={codes}"
         line = csv_line(f"speedup.{name}", t_base * 1e6, derived)
         print_fn(line)
+        # speedup_<tag> keys: the history sentinel (repro.obs.check) gates
+        # these as higher-is-better series, so the names must carry the
+        # direction
         rows.append(dict(name=name, t_base=t_base, ops_base=ops_base,
-                         ops_race=ops_race, backend=backend, **speed))
+                         ops_race=ops_race, backend=backend,
+                         **{f"speedup_{k}": v for k, v in speed.items()}))
     # the envelope summary rides as a sibling key, not a row — per-case rows
     # keep one uniform schema for BENCH_speedup.json consumers
     return dict(cases=rows, envelope=envelope(print_fn=print_fn))

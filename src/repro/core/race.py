@@ -314,6 +314,10 @@ class RaceResult:
             out["metrics"] = _obs.snapshot(label_filter={"plan": ph})
             out["events"] = [e for e in _obs.events()
                              if e.get("plan") == ph]
+            # this plan's slice of the span timeline (Chrome-trace ready:
+            # repro.obs.trace.chrome_trace renders these records directly)
+            out["spans"] = [s for s in _obs.span_records()
+                            if s.get("labels", {}).get("plan") == ph]
         return out
 
     # --- pretty ------------------------------------------------------------

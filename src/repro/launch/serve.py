@@ -107,6 +107,11 @@ def main():
             with open(args.json, "w") as f:
                 f.write(out + "\n")
             print(f"wrote {args.json}")
+        # decode-latency trajectory: one history row per serve run, keyed
+        # like the benchmark sections (no-op without $RACE_BENCH_HISTORY)
+        from repro.obs.history import append_rows
+
+        append_rows("serve", [doc], doc["stamp"])
     else:
         print(json.dumps(doc))
 

@@ -33,21 +33,24 @@ import threading
 
 from .events import DEFAULT_RING, EventLog, load_jsonl
 from .metrics import DEFAULT_BUCKETS, Counter, Gauge, Histogram, Registry
-from .spans import NOOP_SPAN, Span, current_path
+from .spans import (DEFAULT_SPAN_RING, NOOP_SPAN, Span, SpanLog,
+                    current_path, epoch_of_origin)
 
 __all__ = [
     "enabled", "configure", "reset", "span", "event", "events",
     "counter", "gauge", "histogram", "metrics", "event_log",
-    "snapshot", "span_summary", "render_prometheus", "render_json",
-    "dump", "run_stamp", "current_path", "load_jsonl",
-    "Registry", "Counter", "Gauge", "Histogram", "EventLog",
-    "DEFAULT_BUCKETS", "DEFAULT_RING",
-    "ENV_OBS", "ENV_EVENTS", "ENV_RING", "OBS_SCHEMA",
+    "snapshot", "span_summary", "span_records", "span_log",
+    "render_prometheus", "render_json",
+    "dump", "run_stamp", "current_path", "load_jsonl", "epoch_of_origin",
+    "Registry", "Counter", "Gauge", "Histogram", "EventLog", "SpanLog",
+    "DEFAULT_BUCKETS", "DEFAULT_RING", "DEFAULT_SPAN_RING",
+    "ENV_OBS", "ENV_EVENTS", "ENV_RING", "ENV_SPANS", "OBS_SCHEMA",
 ]
 
 ENV_OBS = "RACE_OBS"
 ENV_EVENTS = "RACE_OBS_EVENTS"
 ENV_RING = "RACE_OBS_RING"
+ENV_SPANS = "RACE_OBS_SPANS"
 
 #: schema version stamped on dumps and benchmark JSON artifacts
 OBS_SCHEMA = 1
@@ -69,21 +72,34 @@ def _env_ring() -> int:
         raise ValueError(f"{ENV_RING}={raw!r} is not an integer") from None
 
 
+def _env_span_ring() -> int:
+    raw = os.environ.get(ENV_SPANS, "").strip()
+    if not raw:
+        return DEFAULT_SPAN_RING
+    try:
+        return max(1, int(raw))
+    except ValueError:
+        raise ValueError(f"{ENV_SPANS}={raw!r} is not an integer") from None
+
+
 class _State:
     """The process-wide observability state (swapped atomically on reset)."""
 
-    __slots__ = ("enabled", "registry", "events")
+    __slots__ = ("enabled", "registry", "events", "spans")
 
-    def __init__(self, enabled: bool, registry: Registry, events: EventLog):
+    def __init__(self, enabled: bool, registry: Registry, events: EventLog,
+                 spans: SpanLog):
         self.enabled = enabled
         self.registry = registry
         self.events = events
+        self.spans = spans
 
 
 _lock = threading.Lock()
 _state = _State(_env_enabled(), Registry(),
                 EventLog(_env_ring(),
-                         os.environ.get(ENV_EVENTS, "").strip() or None))
+                         os.environ.get(ENV_EVENTS, "").strip() or None),
+                SpanLog(_env_span_ring()))
 
 
 def enabled() -> bool:
@@ -109,19 +125,21 @@ def configure(enabled=None, events_path=..., ring=None) -> None:
                 ev._ring.append(e)
                 ev._seq = max(ev._seq, e.get("seq", 0))
             old.close()
-        _state = _State(new_enabled, st.registry, ev)
+        _state = _State(new_enabled, st.registry, ev, st.spans)
 
 
 def reset() -> None:
-    """Fresh registry + event log, enabled flag re-read from the env.
-    Test isolation and long-lived-process rollover both go through here."""
+    """Fresh registry + event log + span log, enabled flag re-read from the
+    env.  Test isolation and long-lived-process rollover both go through
+    here."""
     global _state
     with _lock:
         _state.events.close()
         _state = _State(_env_enabled(), Registry(),
                         EventLog(_env_ring(),
                                  os.environ.get(ENV_EVENTS, "").strip()
-                                 or None))
+                                 or None),
+                        SpanLog(_env_span_ring()))
 
 
 # -- instrumentation front doors (cheap when disabled) -----------------------
@@ -133,7 +151,7 @@ def span(name: str, **labels):
     st = _state
     if not st.enabled:
         return NOOP_SPAN
-    return Span(name, st.registry, labels)
+    return Span(name, st.registry, labels, st.spans)
 
 
 def event(kind: str, **fields):
@@ -190,6 +208,16 @@ def span_summary() -> dict:
     return _state.registry.span_summary()
 
 
+def span_log() -> SpanLog:
+    return _state.spans
+
+
+def span_records() -> list:
+    """Completed-span timeline records (newest ``RACE_OBS_SPANS`` kept) —
+    the raw material of :mod:`repro.obs.trace` Chrome-trace export."""
+    return _state.spans.records()
+
+
 def render_prometheus() -> str:
     return _state.registry.render_prometheus()
 
@@ -200,10 +228,15 @@ def render_json(label_filter=None) -> str:
 
 def run_stamp() -> dict:
     """Identity stamp for machine-readable artifacts: schema version, UTC
-    timestamp, device/backend string, jax version.  Shared by ``obs.dump``,
-    every ``BENCH_*.json``, and ``launch/serve.py --json`` so artifact
-    trajectories are diffable across runs and machines."""
+    timestamp, device/backend string, jax version, and the host signature
+    (CPU count + node name).  Shared by ``obs.dump``, every
+    ``BENCH_*.json``, and ``launch/serve.py --json`` so artifact
+    trajectories are diffable across runs and machines — the benchmark
+    history store (:mod:`repro.obs.history`) keys baselines on the
+    (device, jax, host_cpu_count) triple, so numbers from a 1-core CI
+    container never gate against a 96-core workstation's."""
     import datetime
+    import platform
 
     stamp = dict(
         schema=OBS_SCHEMA,
@@ -220,15 +253,25 @@ def run_stamp() -> dict:
     except Exception:  # pragma: no cover - stamping must never fail
         stamp["device"] = "unknown"
         stamp["jax"] = "unknown"
+    try:
+        stamp["host_cpu_count"] = os.cpu_count() or 0
+        stamp["host"] = platform.node() or "unknown"
+    except Exception:  # pragma: no cover - stamping must never fail
+        stamp["host_cpu_count"] = 0
+        stamp["host"] = "unknown"
     return stamp
 
 
 def dump(path=None) -> dict:
-    """Full telemetry document: ``{"stamp", "metrics", "events"}``; written
-    as JSON when ``path`` is given.  ``repro.obs.report`` renders these."""
+    """Full telemetry document: ``{"stamp", "metrics", "events", "spans"}``;
+    written as JSON when ``path`` is given.  ``repro.obs.report`` renders
+    these (and ``--trace-out`` turns the span records into a Chrome
+    trace)."""
     doc = dict(stamp=run_stamp(), metrics=_state.registry.snapshot(),
                events=_state.events.events(),
-               event_counts=_state.events.counts())
+               event_counts=_state.events.counts(),
+               spans=_state.spans.records(),
+               span_origin_epoch=epoch_of_origin())
     if path is not None:
         with open(path, "w") as f:
             json.dump(doc, f, indent=1, default=str)

@@ -236,15 +236,24 @@ class Registry:
 
     def render_prometheus(self) -> str:
         """Prometheus text exposition (counters, gauges, cumulative-bucket
-        histograms with ``_bucket``/``_sum``/``_count`` series)."""
+        histograms with ``_bucket``/``_sum``/``_count`` series).
+
+        Label values are escaped per the exposition format (backslash,
+        double quote, newline) — plan hashes, file paths, and diagnostic
+        strings all flow into labels, so unescaped values would silently
+        corrupt the scrape."""
         lines = []
+
+        def esc(v) -> str:
+            return (str(v).replace("\\", "\\\\").replace('"', '\\"')
+                    .replace("\n", "\\n"))
 
         def fmt_labels(labels: tuple, extra: tuple = ()) -> str:
             items = labels + extra
             if not items:
                 return ""
             return ("{" + ",".join(
-                f'{k}="{v}"' for k, v in items) + "}")
+                f'{k}="{esc(v)}"' for k, v in items) + "}")
 
         by_name: dict = {}
         for (name, labels), m in self._items(self._counters):

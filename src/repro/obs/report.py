@@ -4,14 +4,20 @@
     PYTHONPATH=src python -m repro.obs.report --events obs-events.jsonl
     PYTHONPATH=src python -m repro.obs.report OBS_metrics.json \
         --require-spans detect,lower,compile,run   # CI wiring guard
+    PYTHONPATH=src python -m repro.obs.report OBS_metrics.json \
+        --trace-out trace.json    # chrome://tracing / Perfetto timeline
 
-Sections: span breakdown (count / total / mean / p50 / p99 from the
+Sections: span breakdown (count / total / mean / p50 / p95 / p99 from the
 log-bucket histograms), top counters, gauges, and event counts grouped by
 ``kind`` (with per-reason / per-code sub-counts for decision kinds).
 
 ``--require-spans`` exits 2 when any named span histogram is missing or has
 zero observations — the CI regression guard that catches instrumentation
-being silently unwired.
+being silently unwired; the failure message includes the spans that *were*
+recorded with their timing summaries, so the report names what actually ran.
+
+``--trace-out`` converts the dump's span timeline records into a Chrome
+Trace Event Format file (see :mod:`repro.obs.trace`).
 """
 from __future__ import annotations
 
@@ -51,7 +57,7 @@ def _hist_stats(snap: dict) -> dict:
 
     return dict(count=count, total=total,
                 mean=(total / count if count else None),
-                p50=q(0.5), p99=q(0.99))
+                p50=q(0.5), p95=q(0.95), p99=q(0.99))
 
 
 def span_table(metrics: dict) -> dict:
@@ -125,13 +131,13 @@ def render_text(doc: dict, top: int = 20) -> str:
     if spans:
         lines.append("")
         lines.append(f"{'span':<16}{'count':>8}{'total':>12}{'mean':>12}"
-                     f"{'p50':>12}{'p99':>12}")
+                     f"{'p50':>12}{'p95':>12}{'p99':>12}")
         for name in sorted(spans, key=lambda n: -spans[n]["total"]):
             s = spans[name]
             lines.append(
                 f"{name:<16}{s['count']:>8}{_fmt_s(s['total']):>12}"
                 f"{_fmt_s(s['mean']):>12}{_fmt_s(s['p50']):>12}"
-                f"{_fmt_s(s['p99']):>12}")
+                f"{_fmt_s(s.get('p95')):>12}{_fmt_s(s['p99']):>12}")
     counters = metrics.get("counters") or {}
     if counters:
         lines.append("")
@@ -175,6 +181,11 @@ def main(argv=None) -> int:
     ap.add_argument("--require-spans", default="",
                     help="comma-separated span names that must have >0 "
                          "observations; exit 2 otherwise (CI wiring guard)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write the dump's span timeline records as a "
+                         "Chrome Trace Event Format JSON (chrome://tracing "
+                         "/ Perfetto); exit 2 when the dump has no span "
+                         "records")
     args = ap.parse_args(argv)
 
     if args.dump is None and args.events is None:
@@ -194,12 +205,38 @@ def main(argv=None) -> int:
     else:
         sys.stdout.write(render_text(doc))
 
+    if args.trace_out:
+        from .trace import write_trace
+
+        recs = doc.get("spans") or []
+        if not recs:
+            print("NO SPAN RECORDS: the dump carries no span timeline "
+                  "(RACE_OBS off, pre-span-log artifact, or nothing ran) — "
+                  "cannot write a trace", file=sys.stderr)
+            return 2
+        write_trace(args.trace_out, recs, stamp=doc.get("stamp"),
+                    origin_epoch=doc.get("span_origin_epoch"))
+        print(f"trace: wrote {args.trace_out} ({len(recs)} spans)")
+
     required = [s for s in args.require_spans.split(",") if s.strip()]
     if required:
         missing = check_spans(doc, [s.strip() for s in required])
         if missing:
             print(f"MISSING SPANS: {','.join(missing)} — instrumentation "
                   f"unwired or the run executed nothing", file=sys.stderr)
+            # timing context: what *did* run, with its latency summary, so
+            # the failure message localizes the unwired phase
+            spans = span_table(doc.get("metrics") or {})
+            if spans:
+                print("recorded spans (count/total/p50/p95):",
+                      file=sys.stderr)
+                for name in sorted(spans, key=lambda n: -spans[n]["total"]):
+                    s = spans[name]
+                    print(f"  {name}: {s['count']}x total="
+                          f"{_fmt_s(s['total'])} p50={_fmt_s(s['p50'])} "
+                          f"p95={_fmt_s(s.get('p95'))}", file=sys.stderr)
+            else:
+                print("recorded spans: none", file=sys.stderr)
             return 2
         print(f"require-spans ok: {','.join(s.strip() for s in required)}")
     return 0

@@ -188,6 +188,35 @@ def test_prometheus_exposition():
     assert doc["counters"]['race_builds_total{reassociate=3}'] == 1
 
 
+def test_prometheus_label_value_escaping():
+    """Exposition-format escaping: backslash, double quote, newline.  Plan
+    hashes, file paths, and diagnostic strings flow into label values — an
+    unescaped quote or newline silently corrupts the whole scrape."""
+    _enable()
+    obs.counter("c", path='a"b\\c\nd').inc()
+    text = obs.render_prometheus()
+    assert 'c{path="a\\"b\\\\c\\nd"} 1' in text
+    # the raw newline must never appear: every series stays on one line
+    for line in text.splitlines():
+        assert line.startswith(("#", "c{"))
+
+
+def test_prometheus_histogram_buckets_are_cumulative_monotone():
+    _enable()
+    h = obs.histogram("race_span_seconds", span="run", path="run")
+    for v in (5e-7, 1e-4, 1e-4, 0.5, 200.0):  # incl. under- and overflow
+        h.observe(v)
+    text = obs.render_prometheus()
+    counts = []
+    for line in text.splitlines():
+        if line.startswith("race_span_seconds_bucket"):
+            counts.append(int(line.rsplit(" ", 1)[1]))
+    assert len(counts) >= 2
+    assert counts == sorted(counts)  # cumulative => non-decreasing
+    assert counts[-1] == 5  # le="+Inf" covers every observation
+    assert "race_span_seconds_count" in text
+
+
 def test_snapshot_label_filter():
     _enable()
     obs.counter("c", plan="a").inc()
@@ -502,6 +531,9 @@ def test_report_span_table_merges_label_sets():
     table = report.span_table(metrics)
     assert table["run"]["count"] == 3
     assert table["run"]["total"] == pytest.approx(0.25)
+    # the latency columns the report renders all come from the merged
+    # buckets; p95 (3 obs, all <= 1.0) resolves to the 1.0 edge
+    assert table["run"]["p95"] == pytest.approx(1.0)
 
 
 def test_run_stamp_fields():
@@ -510,3 +542,6 @@ def test_run_stamp_fields():
     assert st["ts"].endswith("+00:00")  # UTC
     assert ":" in st["device"]
     assert st["jax"] not in ("", None)
+    # the host signature keys benchmark-history baselines (env_key)
+    assert isinstance(st["host_cpu_count"], int) and st["host_cpu_count"] >= 1
+    assert st["host"]
