@@ -184,13 +184,49 @@ def _is_weak(v) -> bool:
             and not isinstance(v, np.generic))
 
 
+#: python scalar types whose signature is value-independent (ints are not:
+#: an out-of-range int falls back to the generic path)
+_PY_SCALAR_SIG = {bool: "bool", float: "float64", complex: "complex128"}
+
+#: dtype -> .name memo: ``np.dtype.name`` is a *computed* string property,
+#: too slow for the per-request serving path
+_DTYPE_NAMES: dict = {}
+
+
+def _dt_name(dt) -> str:
+    name = _DTYPE_NAMES.get(dt)
+    if name is None:
+        name = _DTYPE_NAMES[dt] = np.dtype(dt).name
+    return name
+
+
 def env_signature(env: Mapping) -> tuple:
     """``((name, shape, dtype, weak_type), ...)`` sorted by name — the
-    shapes/dtypes half of the executor key.  Cheap: never copies data."""
-    return tuple(
-        (nm, tuple(np.shape(env[nm])), _dtype_name(env[nm]),
-         _is_weak(env[nm]))
-        for nm in sorted(env))
+    shapes/dtypes half of the executor key.  Cheap: never copies data.
+
+    This sits on the per-request serving path, so the common entry kinds —
+    numpy arrays/scalars, jax arrays, plain python scalars — are resolved
+    from type checks and attributes alone: no ``np.asarray`` round trips,
+    no computed ``dtype.name`` property calls."""
+    out = []
+    for nm in sorted(env):
+        v = env[nm]
+        tv = type(v)
+        if tv is np.ndarray:
+            out.append((nm, v.shape, _dt_name(v.dtype), False))
+            continue
+        name = _PY_SCALAR_SIG.get(tv)
+        if name is not None:
+            out.append((nm, (), name, True))
+            continue
+        shape = getattr(v, "shape", None)
+        dt = getattr(v, "dtype", None)
+        if shape is not None and dt is not None:
+            out.append((nm, tuple(shape), _dt_name(dt),
+                        bool(getattr(v, "weak_type", False))))
+            continue
+        out.append((nm, tuple(np.shape(v)), _dtype_name(v), _is_weak(v)))
+    return tuple(out)
 
 
 def stacked_signature(stacked: Mapping) -> tuple:
@@ -251,6 +287,43 @@ class ExecutorKey:
 # ---------------------------------------------------------------------------
 
 
+def _stack_column(vals: Sequence):
+    """Stack one env entry across a batch, minimizing device dispatches.
+
+    ``jnp.stack`` over a list of host values issues one python-dispatched
+    transfer *per element* plus a concatenate — at serving batch sizes that
+    dwarfs the batched compute itself.  When every element is a host
+    (numpy) array or strongly-typed numpy scalar of one dtype, stack on the
+    host and return the *numpy* stack: the jitted batch call's C++ argument
+    path transfers one contiguous buffer orders of magnitude cheaper than
+    an eager ``jnp.asarray`` would, and the result is bit-identical.
+    Anything else (jax arrays already on device, python scalars with
+    weak-type promotion semantics, mixed dtypes) takes the original jnp
+    path, which preserves promotion behavior exactly.
+    """
+    first = vals[0]
+    cls = type(first)
+    if cls is not np.ndarray and isinstance(first, np.generic):
+        # typed numpy scalars: type identity pins dtype and shape at once,
+        # and np.array runs the conversion as one C loop — the generic
+        # per-element dtype/shape comparison below costs more than the
+        # batched compute for scalar-heavy envs at serving batch sizes
+        if all(type(v) is cls for v in vals):
+            return np.array(vals, dtype=first.dtype)
+    if isinstance(first, (np.ndarray, np.generic)):
+        dt, shp = first.dtype, np.shape(first)
+        if all(isinstance(v, (np.ndarray, np.generic)) and v.dtype == dt
+               and np.shape(v) == shp for v in vals):
+            # preallocate + row-assign instead of np.stack: stack's
+            # expand_dims-then-concatenate costs ~3x more python overhead
+            # per column at serving batch sizes
+            out = np.empty((len(vals),) + shp, dtype=dt)
+            for i, v in enumerate(vals):
+                out[i] = v
+            return out
+    return jnp.stack([jnp.asarray(v) for v in vals])
+
+
 class CompiledRace:
     """One compiled specialization of a plan: a reusable jitted callable.
 
@@ -281,6 +354,14 @@ class CompiledRace:
         self._batch_lock = threading.Lock()
         self._batch_jit = None
         self._plan_h = plan_hash(plan)
+
+        # zero cold start: if $RACE_COMPILE_CACHE is set, the XLA compile
+        # this executor triggers on its first call is served from (and
+        # persisted to) the on-disk compilation cache.  Must happen before
+        # jit dispatch, hence here in the builder.
+        from . import compile_cache as _ccache
+
+        _ccache.ensure_enabled()
 
         with _obs.span("lower", plan=self._plan_h, backend=self.backend):
             if self.backend == "pallas":
@@ -358,12 +439,15 @@ class CompiledRace:
         (B, ...) array}`` — element ``[b]`` equals ``run(envs[b])[name]``.
         """
         if isinstance(envs, Mapping):
-            stacked = {k: jnp.asarray(v) for k, v in envs.items()}
+            # no eager conversion: the jit's C++ argument path ingests host
+            # (numpy) columns far cheaper than a python-dispatched
+            # jnp.asarray per column would
+            stacked = dict(envs)
         else:
             envs = list(envs)
             if not envs:
                 raise ValueError("run_batch needs at least one env")
-            stacked = {k: jnp.stack([jnp.asarray(e[k]) for e in envs])
+            stacked = {k: _stack_column([e[k] for e in envs])
                        for k in envs[0]}
         if self._batch_jit is None:
             with self._batch_lock:
@@ -475,6 +559,7 @@ class ExecutorCache:
             _obs.counter("race_executor_cache_total",
                          event="hit" if hit else "miss",
                          plan=key.plan).inc()
+            _obs.gauge("race_executor_cache_size").set(len(self._entries))
             if not hit:
                 _obs.event("executor_build", plan=key.plan,
                            backend=key.backend, donate=key.donate,
@@ -492,6 +577,19 @@ class ExecutorCache:
         with self._lock:
             self._entries.clear()
             self.stats = CacheStats()
+        if _obs.enabled():
+            _obs.gauge("race_executor_cache_size").set(0)
+
+    def stats_snapshot(self) -> dict:
+        """Atomic hit/miss/eviction snapshot taken under the cache lock.
+
+        ``self.stats`` mutates field-by-field inside ``get_or_build``;
+        reading it lock-free can observe a hit count and a miss count from
+        *different* lookups (a torn read — hit_rate over totals that never
+        coexisted).  Every stats consumer goes through here.
+        """
+        with self._lock:
+            return self.stats.snapshot()
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -524,7 +622,7 @@ def executor_cache() -> ExecutorCache:
 
 
 def cache_stats() -> dict:
-    return _CACHE.stats.snapshot()
+    return _CACHE.stats_snapshot()
 
 
 def clear_cache() -> None:
@@ -541,6 +639,7 @@ def configure_cache(maxsize: int) -> None:
             evicted.append(old_key)
             _CACHE.stats.evictions += 1
     if _obs.enabled():
+        _obs.gauge("race_executor_cache_size").set(len(_CACHE._entries))
         for old in evicted:
             _obs.counter("race_executor_cache_total", event="evict",
                          plan=old.plan).inc()

@@ -53,7 +53,8 @@ COMPACT_LINE_THRESHOLD = 4096
 #: row fields that *identify* a benchmark case (joined into the series key)
 #: rather than measure it — everything numeric outside this set is a metric
 IDENTITY_FIELDS = ("name", "case", "backend", "n", "shards", "strategy",
-                   "tag", "variant", "level", "arch")
+                   "tag", "variant", "level", "arch", "compile_cache",
+                   "batch", "concurrency")
 
 try:  # POSIX advisory locking; harmlessly absent elsewhere
     import fcntl

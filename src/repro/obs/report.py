@@ -16,6 +16,12 @@ zero observations — the CI regression guard that catches instrumentation
 being silently unwired; the failure message includes the spans that *were*
 recorded with their timing summaries, so the report names what actually ran.
 
+``--require-events kind[:min],...`` is the same guard for *events* (dump
+events plus ``--events`` JSONL): exit 2 when a kind was recorded fewer than
+``min`` times (default 1).  E.g. ``--require-events compile_cache_hit`` is
+the CI assertion that the persistent compilation cache actually served the
+second run.
+
 ``--trace-out`` converts the dump's span timeline records into a Chrome
 Trace Event Format file (see :mod:`repro.obs.trace`).
 """
@@ -169,6 +175,29 @@ def check_spans(doc: dict, required: list) -> list:
             if spans.get(name, {}).get("count", 0) <= 0]
 
 
+def parse_event_requirements(spec: str) -> list:
+    """``"kind[:min],..."`` -> ``[(kind, min_count), ...]``; bad minimums
+    raise ValueError so CI misconfigurations fail loudly."""
+    out = []
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        kind, _, mn = part.partition(":")
+        if mn and (not mn.isdigit() or int(mn) < 1):
+            raise ValueError(
+                f"--require-events: bad minimum {mn!r} for {kind!r}")
+        out.append((kind.strip(), int(mn) if mn else 1))
+    return out
+
+
+def check_events(doc: dict, required: list) -> list:
+    """``(kind, want, got)`` for each requirement the events fail to meet."""
+    counts = _Counter(ev.get("kind", "?") for ev in doc.get("events") or [])
+    return [(kind, want, counts.get(kind, 0))
+            for kind, want in required if counts.get(kind, 0) < want]
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
@@ -181,6 +210,11 @@ def main(argv=None) -> int:
     ap.add_argument("--require-spans", default="",
                     help="comma-separated span names that must have >0 "
                          "observations; exit 2 otherwise (CI wiring guard)")
+    ap.add_argument("--require-events", default="", metavar="KIND[:MIN],...",
+                    help="comma-separated event kinds (optionally "
+                         "kind:min_count, default 1) that must appear in "
+                         "the dump events + --events JSONL; exit 2 "
+                         "otherwise")
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write the dump's span timeline records as a "
                          "Chrome Trace Event Format JSON (chrome://tracing "
@@ -239,6 +273,30 @@ def main(argv=None) -> int:
                 print("recorded spans: none", file=sys.stderr)
             return 2
         print(f"require-spans ok: {','.join(s.strip() for s in required)}")
+
+    if args.require_events:
+        try:
+            wanted = parse_event_requirements(args.require_events)
+        except ValueError as e:
+            print(str(e), file=sys.stderr)
+            return 2
+        failed = check_events(doc, wanted)
+        if failed:
+            for kind, want, got in failed:
+                print(f"MISSING EVENTS: {kind} x{got} (need >= {want}) — "
+                      f"the instrumented path did not run or its events "
+                      f"were not captured", file=sys.stderr)
+            evs = event_summary(doc.get("events") or [])
+            if evs:
+                print("recorded event kinds:", file=sys.stderr)
+                for kind in sorted(evs, key=lambda k: -evs[k]["count"]):
+                    print(f"  {kind} x{evs[kind]['count']}",
+                          file=sys.stderr)
+            else:
+                print("recorded event kinds: none", file=sys.stderr)
+            return 2
+        print("require-events ok: " + ",".join(
+            f"{k}:{m}" for k, m in wanted))
     return 0
 
 

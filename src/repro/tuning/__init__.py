@@ -22,18 +22,24 @@ and — the payoff — ``compile_plan(..., backend="auto")`` consults the store
 directly, so a decision tuned in one process is reused by every later
 process with zero re-measurement.
 """
-from .measure import Measurement, measure_candidate, time_executor
-from .space import REASSOCIATE_LEVELS, Config, block_grid, candidate_configs
+from .measure import (Measurement, measure_candidate, time_executor,
+                      time_executor_batch)
+from .space import (DEFAULT_BATCH_SIZES, REASSOCIATE_LEVELS, Config,
+                    block_grid, candidate_configs,
+                    representative_batch_sizes)
 from .store import (ENV_STORE, SCHEMA_VERSION, TuningStore, default_store,
-                    plan_choice, program_record, record_key, runtime_fence,
-                    sig_json, store_file)
+                    plan_batch_choice, plan_choice, program_record,
+                    record_key, runtime_fence, sig_json, store_file)
 from .tuner import TuningDecision, autotune, search_signature
 
 __all__ = [
     "autotune", "TuningDecision", "Config", "Measurement", "TuningStore",
     "search_signature",
     "candidate_configs", "block_grid", "measure_candidate", "time_executor",
-    "default_store", "store_file", "plan_choice", "program_record",
+    "time_executor_batch", "representative_batch_sizes",
+    "DEFAULT_BATCH_SIZES",
+    "default_store", "store_file", "plan_choice", "plan_batch_choice",
+    "program_record",
     "record_key", "runtime_fence", "sig_json", "REASSOCIATE_LEVELS",
     "SCHEMA_VERSION", "ENV_STORE",
 ]

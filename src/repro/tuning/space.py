@@ -27,6 +27,18 @@ from repro.core.depgraph import Plan
 #: the reassociation strategies the repo implements (paper Section 7.1)
 REASSOCIATE_LEVELS = (0, 3, 4)
 
+#: representative serving batch sizes for batch-aware tuning: the batched
+#: (vmapped) executor has different economics from the per-call path —
+#: dispatch overhead amortizes, Pallas block choices interact with the
+#: leading vmap axis — so the tuner measures these sizes separately and the
+#: serving runtime picks the nearest recorded one at dispatch time.
+DEFAULT_BATCH_SIZES = (2, 8, 32)
+
+
+def representative_batch_sizes(quick: bool = False) -> tuple:
+    """The batch sizes a batch-aware search measures (one in quick mode)."""
+    return (8,) if quick else DEFAULT_BATCH_SIZES
+
 
 @dataclass(frozen=True)
 class Config:

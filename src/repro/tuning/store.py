@@ -35,6 +35,7 @@ Durability contract (pinned by tests):
 from __future__ import annotations
 
 import json
+import math
 import os
 import tempfile
 import threading
@@ -132,17 +133,23 @@ def sig_json(sig: tuple) -> str:
 
 
 def record_key(kind: str, struct_hash: str, sig: tuple,
-               fence: Optional[Mapping] = None, opts: str = "") -> str:
+               fence: Optional[Mapping] = None, opts: str = "",
+               batch: int = 0) -> str:
     """Store key.  ``opts`` is a canonical token of the *search-shaping*
     options (program-kind records only): a decision found by a narrower
     search (``backends=("xla",)``, restricted ``levels``, ...) must never
     answer a later full-space request, so the searched space is part of the
-    record's identity."""
+    record's identity.  ``batch > 0`` marks a record measured on the
+    *batched* (vmapped) executor at that batch size — a separate population
+    from per-call records (``batch=0``, the historical key shape, unchanged
+    so existing stores stay live)."""
     f = fence or runtime_fence()
     parts = [kind, struct_hash, sig_json(sig), str(f["device"]),
              str(f["jax"])]
     if opts:
         parts.append(opts)
+    if batch > 0:
+        parts.append(f"batch={int(batch)}")
     return "|".join(parts)
 
 
@@ -404,6 +411,41 @@ def plan_choice(key: str,
     except Exception:
         pass
     return None
+
+
+def plan_batch_choice(struct_hash: str, sig: tuple, batch: int,
+                      store: Optional[TuningStore] = None) -> Optional[dict]:
+    """Best recorded choice for the *batched* executor of one plan.
+
+    Exact ``batch`` match wins; otherwise the nearest recorded batch size by
+    log-ratio answers (a config tuned at batch 8 is a far better guess for
+    batch 6 than the single-call record).  Returns None — never raises —
+    when nothing batched was ever recorded for this plan + signature.
+    """
+    try:
+        s = store if store is not None else default_store()
+        exact = s.get(record_key("plan", struct_hash, sig, batch=batch))
+        if exact is not None and isinstance(exact.get("choice"), dict):
+            return exact["choice"]
+        prefix = record_key("plan", struct_hash, sig) + "|batch="
+        best, best_dist = None, None
+        for key in s.keys():
+            if not key.startswith(prefix):
+                continue
+            try:
+                b = int(key[len(prefix):])
+            except ValueError:
+                continue
+            if b < 1:
+                continue
+            dist = abs(math.log(b / max(1, batch)))
+            if best_dist is None or dist < best_dist:
+                rec = s.get(key)
+                if rec is not None and isinstance(rec.get("choice"), dict):
+                    best, best_dist = rec["choice"], dist
+        return best
+    except Exception:
+        return None
 
 
 def program_record(program_hash: str, sig: tuple,

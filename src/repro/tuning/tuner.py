@@ -138,17 +138,24 @@ def _opts_token(v):
 
 def search_signature(*, levels, backends, grid, quick, default_reassociate,
                      rewrite_div, race_opts, tolerance,
-                     noise_margin) -> str:
+                     noise_margin, batch_sizes=()) -> str:
     """Canonical token of every option that shapes the candidate space or
     the selection rule.  Part of the program-level store key: a decision
     from a narrower search (say ``backends=("xla",)``) must not answer a
     later full-space ``autotune`` call for the same program + env."""
-    return json.dumps(_opts_token(dict(
+    opts = dict(
         levels=sorted(set(levels)), backends=backends, grid=grid,
         quick=quick, default_reassociate=default_reassociate,
         rewrite_div=rewrite_div, race_opts=dict(race_opts or {}),
         tolerance=tolerance, noise_margin=noise_margin,
-    )), sort_keys=True, separators=(",", ":"))
+    )
+    if batch_sizes:
+        # only batch-aware searches carry the key: the default token (and
+        # thus every record written before batch-aware tuning existed)
+        # stays byte-identical
+        opts["batch_sizes"] = sorted(set(int(b) for b in batch_sizes))
+    return json.dumps(_opts_token(opts), sort_keys=True,
+                      separators=(",", ":"))
 
 
 def autotune(program: Program, env: Mapping, *,
@@ -160,7 +167,8 @@ def autotune(program: Program, env: Mapping, *,
              race_opts: Optional[Mapping] = None,
              tolerance: Optional[float] = None, noise_margin: float = 0.03,
              store: Optional[TuningStore] = None, force: bool = False,
-             write: bool = True) -> TuningDecision:
+             write: bool = True,
+             batch_sizes: Sequence[int] = ()) -> TuningDecision:
     """Pick (and persist) the fastest correct config for ``program`` + ``env``.
 
     Consults the persistent store first: a record for this exact (program
@@ -185,10 +193,12 @@ def autotune(program: Program, env: Mapping, *,
     s = store if store is not None else default_store()
     prog_h = program_hash(program)
     fence = runtime_fence()
+    batch_sizes = tuple(sorted(set(int(b) for b in batch_sizes if b > 1)))
     search = search_signature(
         levels=levels, backends=backends, grid=grid, quick=quick,
         default_reassociate=default_reassociate, rewrite_div=rewrite_div,
-        race_opts=race_opts, tolerance=tolerance, noise_margin=noise_margin)
+        race_opts=race_opts, tolerance=tolerance, noise_margin=noise_margin,
+        batch_sizes=batch_sizes)
     key = record_key("program", prog_h, sig, fence, opts=search)
 
     from repro import obs
@@ -242,6 +252,17 @@ def autotune(program: Program, env: Mapping, *,
                               interpret=interpret)
             for c in configs]
         winner, default_m = _pick(measurements, default, noise_margin)
+        # batch-aware pass: the batched (vmapped) executor has different
+        # economics, so the per-call survivors are re-measured at each
+        # representative batch size and recorded separately below (what the
+        # serving runtime's coalesced dispatch consults)
+        if batch_sizes:
+            ok_configs = [m.config for m in measurements if m.ok]
+            measurements.extend(
+                measure_candidate(plans[c.reassociate], c, env, truth, tol,
+                                  repeats=repeats, warmup=warmup,
+                                  interpret=interpret, batch=b)
+                for b in batch_sizes for c in ok_configs)
     search_s = time.perf_counter() - t0
     if obs.enabled():
         obs.event("tuning_decision", program=prog_h,
@@ -267,21 +288,31 @@ def autotune(program: Program, env: Mapping, *,
                    choice=winner.config.as_dict(),
                    default=default.as_dict(), stats=stats))
         for lvl, plan in plans.items():
-            level_ms = [m for m in measurements
-                        if m.ok and m.config.reassociate == lvl]
-            if not level_ms:
-                continue
             level_default = Config(lvl, _default_backend_for(plan, backends))
-            ld_m = _find(level_ms, level_default)
-            best = _prefer_default(min(level_ms, key=lambda m: m.us), ld_m,
-                                   level_default, noise_margin)
-            s.put(dict(
-                key=record_key("plan", plan_hash(plan), sig, fence),
-                kind="plan", hash=plan_hash(plan), device=fence["device"],
-                jax=fence["jax"], choice=best.config.as_dict(),
-                stats=dict(us=best.us,
-                           default_us=ld_m.us if ld_m else None,
-                           interpret=bool(interpret))))
+            # one plan record per measured batch population: 0 (the per-call
+            # path compile_plan consults) plus each tuned batch size (what
+            # the serving runtime's coalesced dispatch consults)
+            for b in (0,) + batch_sizes:
+                level_ms = [m for m in measurements
+                            if m.ok and m.config.reassociate == lvl
+                            and m.batch == b]
+                if not level_ms:
+                    continue
+                ld_m = _find(level_ms, level_default)
+                best = _prefer_default(min(level_ms, key=lambda m: m.us),
+                                       ld_m, level_default, noise_margin)
+                rec = dict(
+                    key=record_key("plan", plan_hash(plan), sig, fence,
+                                   batch=b),
+                    kind="plan", hash=plan_hash(plan),
+                    device=fence["device"], jax=fence["jax"],
+                    choice=best.config.as_dict(),
+                    stats=dict(us=best.us,
+                               default_us=ld_m.us if ld_m else None,
+                               interpret=bool(interpret)))
+                if b:
+                    rec["batch"] = b
+                s.put(rec)
 
     return TuningDecision(
         choice=winner.config, default=default,

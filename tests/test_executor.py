@@ -246,6 +246,85 @@ def test_concurrent_runs_on_one_result():
     assert compile_plan(res.plan, env, "xla").trace_count == 1
 
 
+def test_threaded_stress_mixed_traffic_under_resizing(monkeypatch):
+    """Serving-grade stress (PR 10): mixed run/run_batch traffic across
+    several specializations races a thread that keeps resizing the cache
+    (forcing evictions and rebuilds).  Invariants: everything joins (no
+    deadlock), every executor construction is a recorded miss (the ledger
+    proves no double-build escaped the lock), and hits + misses balances
+    the lookup count exactly (stats_snapshot is torn-read-free)."""
+    from repro.core.executor import configure_cache
+
+    builds = []
+    orig_init = CompiledRace.__init__
+
+    def counting_init(self, *a, **kw):
+        builds.append(1)
+        return orig_init(self, *a, **kw)
+
+    monkeypatch.setattr(CompiledRace, "__init__", counting_init)
+
+    specs = []  # four distinct specializations: two sizes x two dtypes
+    for n in (12, 14):
+        case, res = _res(n=n)
+        for dt in (np.float32, np.float64):
+            specs.append((res, build_env(case, dtype=dt),
+                          [build_env(case, seed=s, dtype=dt)
+                           for s in range(2)]))
+
+    n_threads, iters = 6, 8
+    lookups = [0] * n_threads
+    errors = []
+    stop = threading.Event()
+
+    def traffic(idx):
+        try:
+            res, env, envs = specs[idx % len(specs)]
+            for i in range(iters):
+                if i % 3 == 2:
+                    res.run_batch(envs, "xla")
+                else:
+                    res.run(env, "xla")
+                lookups[idx] += 1  # one cache lookup per run/run_batch
+        except Exception as e:  # pragma: no cover - the assertion target
+            errors.append(e)
+
+    def resizer():
+        try:
+            import time
+
+            while not stop.is_set():
+                configure_cache(2)  # below the live specialization count
+                executor_cache().stats_snapshot()  # reader under contention
+                configure_cache(16)
+                time.sleep(0.002)  # shrink spikes, not a busy spin
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    orig_size = executor_cache().maxsize
+    threads = [threading.Thread(target=traffic, args=(i,))
+               for i in range(n_threads)]
+    churn = threading.Thread(target=resizer)
+    try:
+        churn.start()
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=240)
+        stop.set()
+        churn.join(timeout=30)
+        assert not any(t.is_alive() for t in threads + [churn]), "deadlock"
+        assert not errors, errors
+        snap = executor_cache().stats_snapshot()
+        assert len(builds) == snap["misses"]  # every build was one miss
+        assert snap["hits"] + snap["misses"] == sum(lookups)
+        assert snap["evictions"] >= 1  # the resizer actually forced churn
+        assert len(executor_cache()) <= 16
+    finally:
+        stop.set()
+        configure_cache(orig_size)
+
+
 def test_concurrent_cold_start_builds_one_executor():
     case, res = _res()
     env = build_env(case)
